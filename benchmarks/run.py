@@ -1,0 +1,228 @@
+"""Benchmark harness — one function per paper table/figure (§8, §9).
+
+Prints ``name,us_per_call,derived`` CSV rows.  All measurements are CPU
+wall-clock of the jnp integer path (the kernels' oracle math); the TPU
+projection (table5/section9 analogues) comes from the roofline module, which
+is exactly the paper's §9 methodology (measure proof-of-concept, project
+analytically onto the target part).
+
+  table1: per-encoder latency components T (and fitted X) vs sequence length
+  table2: Eq.1 full-model (12-encoder pipeline) latency estimates
+  table3: padded vs no-padding latency (GLUE avg len 38, paper's headline)
+  table4: throughput, padded vs packed (inferences/s)
+  table5: comparison row vs the paper's published accelerator numbers
+  fig15 : "resource utilization" analogue — Cluster-Builder kernel counts
+          and routing-table entries (2N-1 vs N^2)
+  sec9  : v5e int8 roofline estimate of encoder latency (Versal analogue)
+  gmi   : collective byte models — composed vs fused vs gateway-hierarchical
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+SEQ_LENS = (1, 2, 4, 8, 16, 32, 64, 128)
+ROWS: List[str] = []
+
+
+def row(name: str, us: float, derived: str = "") -> None:
+    line = f"{name},{us:.1f},{derived}"
+    ROWS.append(line)
+    print(line)
+
+
+def _median_time(fn, *args, reps: int = 3) -> float:
+    fn(*args)  # compile
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def _one_layer_setup():
+    from repro.configs import get_config
+    from repro.models import ibert as ib
+
+    cfg = get_config("ibert-base")
+    cfg1 = dataclasses.replace(cfg, n_layers=1, max_seq_len=128)
+    key = jax.random.PRNGKey(0)
+    params = ib.init_ibert_params(cfg1, key)
+    toks = jax.random.randint(key, (1, 128), 0, cfg1.vocab_size)
+    act = ib.calibrate(params, cfg1, toks)
+    qp = ib.quantize_ibert(params, cfg1, act)
+    return cfg1, qp
+
+
+def table1_encoder_latency(state: Dict) -> None:
+    """Paper Table 1 analogue: one-encoder latency T per sequence length;
+    X fitted at the paper's ratio (X ~= 0.53 T at seq 128, §9)."""
+    from repro.models import ibert as ib
+
+    cfg1, qp = _one_layer_setup()
+    fwd = jax.jit(
+        lambda t: ib.ibert_int_forward(qp, cfg1, t, impl="ref").values,
+        static_argnames=())
+    t_by_seq = {}
+    for s in SEQ_LENS:
+        toks = jax.random.randint(jax.random.PRNGKey(s), (1, s), 0,
+                                  cfg1.vocab_size)
+        f = jax.jit(lambda t: ib.ibert_int_forward(
+            qp, cfg1, t, impl="ref").values)
+        t_by_seq[s] = _median_time(f, toks)
+        row(f"table1_encoder_T_seq{s}", t_by_seq[s] * 1e6,
+            f"X_est={0.5325 * t_by_seq[s] * 1e6:.1f}us")
+    state["t_by_seq"] = t_by_seq
+
+
+def table2_full_model_eq1(state: Dict) -> None:
+    """Paper Table 2 analogue: Eq.1 with L=12 encoders, d=1.1us hop."""
+    from repro.core.latency_model import StageTiming, total_latency
+
+    t_by_seq = state["t_by_seq"]
+    est = {}
+    for s, t in t_by_seq.items():
+        est[s] = total_latency(StageTiming(T=t, X=0.5325 * t, d=1.1e-6), 12)
+        row(f"table2_ibert12_eq1_seq{s}", est[s] * 1e6,
+            "T+(L-1)(X+d), L=12")
+    state["eq1"] = est
+
+
+def table3_padding_vs_nopadding(state: Dict) -> None:
+    """Paper Table 3 analogue: GLUE avg len 38 unpadded vs padded-to-128."""
+    from repro.core.packing import bucket_len
+
+    t_by_seq = state["t_by_seq"]
+    padded = t_by_seq[128]
+    bucket = bucket_len(38, buckets=SEQ_LENS)  # -> 64
+    nopad = t_by_seq[bucket]
+    row("table3_latency_padded128", padded * 1e6, "per encoder")
+    row("table3_latency_nopad_len38", nopad * 1e6,
+        f"bucket={bucket}, speedup={padded / nopad:.2f}x "
+        f"(paper: 7.19/2.58=2.79x)")
+    state["padded"], state["nopad"] = padded, nopad
+
+
+def table4_throughput(state: Dict) -> None:
+    """Paper Table 4/5 analogue: pipeline steady-state throughput = 1/T."""
+    from repro.core.latency_model import StageTiming, throughput
+
+    thr_pad = throughput(StageTiming(T=state["padded"], X=0, d=0))
+    thr_nopad = throughput(StageTiming(T=state["nopad"], X=0, d=0))
+    row("table4_throughput_padded", 1e6 / thr_pad,
+        f"{thr_pad:.1f} inf/s")
+    row("table4_throughput_nopad", 1e6 / thr_nopad,
+        f"{thr_nopad:.1f} inf/s, gain {thr_nopad / thr_pad:.2f}x "
+        "(paper: no-padding 6802 vs 4121 = 1.65x)")
+
+
+def table5_accelerator_comparison(state: Dict) -> None:
+    """Paper Table 3/5 comparison row: our v5e roofline estimate vs the
+    paper's published numbers (T4 1.66ms, A100 0.77ms, NPE 13.96ms,
+    paper-FPGA 2.58ms no-padding batch-1 latency)."""
+    est = state.get("v5e_latency")
+    if est is None:
+        sec9_v5e_estimate(state)
+        est = state["v5e_latency"]
+    for name, ms in (("NVIDIA_T4", 1.66), ("NVIDIA_A100", 0.77),
+                     ("NPE_FPGA", 13.96), ("paper_6FPGA_nopad", 2.58)):
+        row(f"table5_published_{name}", ms * 1e3, "paper-reported")
+    row("table5_ours_v5e_roofline", est * 1e6,
+        f"speedup vs A100 {0.77e-3 / est:.2f}x (estimate)")
+
+
+def fig15_cluster_resources(state: Dict) -> None:
+    """Fig. 15 analogue: per-cluster kernel counts & routing-table sizes."""
+    from repro.configs import get_config
+    from repro.core.cluster_builder import build_topology
+
+    for arch in ("ibert-base", "deepseek-coder-33b", "moonshot-v1-16b-a3b"):
+        topo = build_topology(get_config(arch))
+        kmax = max(len(c.kernels) for c in topo.clusters)
+        row(f"fig15_{arch}_kernels_per_cluster", kmax,
+            f"clusters={len(topo.clusters)}, total={topo.total_kernels}, "
+            f"routes/device={topo.routing_entries_per_device()} "
+            f"(flat would be {topo.routing_entries_flat()})")
+
+
+def sec9_v5e_estimate(state: Dict) -> None:
+    """§9 analogue: analytic projection of the I-BERT encoder onto TPU v5e
+    int8 (the paper does this for Versal AIEs and lands at 860us vs A100's
+    770us)."""
+    from repro.configs import get_config
+    from repro.roofline.analysis import HBM_BW, PEAK_FLOPS_INT8
+
+    cfg = get_config("ibert-base")
+    s, d, f = 128, cfg.d_model, cfg.d_ff
+    per_layer_flops = 2 * s * d * (3 * d) + 2 * s * s * d * 2 \
+        + 2 * s * d * d + 2 * s * d * f * 2
+    total_flops = per_layer_flops * cfg.n_layers
+    weight_bytes = cfg.n_layers * (4 * d * d + 2 * d * f)  # int8
+    compute_s = total_flops / PEAK_FLOPS_INT8
+    memory_s = weight_bytes / HBM_BW
+    est = max(compute_s, memory_s)
+    state["v5e_latency"] = est
+    row("sec9_v5e_ibert_estimate", est * 1e6,
+        f"compute={compute_s * 1e6:.1f}us mem={memory_s * 1e6:.1f}us "
+        f"(paper Versal est: 860us, A100: 770us)")
+
+
+def gmi_collective_models(state: Dict) -> None:
+    """§4/§5 analogue: link-byte models for a 1 MiB payload per device.
+
+    composed AllReduce (Reduce->Broadcast via root, the paper's composition)
+    vs fused ring vs gateway-hierarchical across 2 pods."""
+    size = 2 ** 20
+    n_intra, n_pods = 256, 2
+    composed = 2 * size * n_intra  # root receives N, then sends N copies
+    ring = 2 * size * (n_intra - 1) / n_intra  # reduce-scatter + all-gather
+    flat_inter = 2 * size * (n_intra * n_pods - 1) / (n_intra * n_pods)
+    gateway = ring + (size / n_intra) * 2  # intra RS/AG + leader exchange
+    row("gmi_allreduce_composed_bytes", composed / 1e3,
+        "bytes(KB) at root link — the paper-faithful Gather->Bcast")
+    row("gmi_allreduce_ring_bytes", ring / 1e3, "fused 1-pod ring")
+    row("gmi_allreduce_flat_2pod_bytes", flat_inter / 1e3,
+        "flat 512-chip ring: every step crosses the pod boundary")
+    row("gmi_allreduce_gateway_2pod_bytes", gateway / 1e3,
+        f"hierarchical: inter-pod carries 1/{n_intra} of payload "
+        "(the clusters-of-clusters gateway rule)")
+
+
+def bench_int8_kernels(state: Dict) -> None:
+    """Kernel microbench: int8 GEMM + i-ops wall time (interpret/oracle)."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-127, 128, (128, 768)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 128, (768, 768)), jnp.int8)
+    t = _median_time(lambda: ops.int8_matmul(
+        a, b, jnp.float32(0.01), jnp.float32(0.01), impl="ref"))
+    row("kernel_int8_matmul_128x768x768", t * 1e6, "oracle path")
+    x = jnp.asarray(rng.integers(-2047, 2047, (128, 128)), jnp.int32)
+    t = _median_time(lambda: ops.i_softmax(x, jnp.float32(0.01), impl="ref"))
+    row("kernel_i_softmax_128x128", t * 1e6, "")
+
+
+def main() -> None:
+    state: Dict = {}
+    table1_encoder_latency(state)
+    table2_full_model_eq1(state)
+    table3_padding_vs_nopadding(state)
+    table4_throughput(state)
+    sec9_v5e_estimate(state)
+    table5_accelerator_comparison(state)
+    fig15_cluster_resources(state)
+    gmi_collective_models(state)
+    bench_int8_kernels(state)
+    print(f"\n{len(ROWS)} benchmark rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Fault-tolerant training driver demo: deterministic pipeline, async
+checkpoints, an injected node failure at step 25, automatic recovery, and
+straggler monitoring — the runtime substrate for the multi-pod deployment.
+
+  PYTHONPATH=src python examples/train_fault_tolerant.py
+(The same driver trains any --arch at full scale on real hardware:
+ python -m repro.launch.train --arch deepseek-coder-33b --steps 10000 ...)
+"""
+import tempfile
+
+from repro.launch import train
+
+
+def main():
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        out = train.main([
+            "--arch", "smollm-135m", "--reduced",
+            "--steps", "60", "--batch", "8", "--seq", "64",
+            "--lr", "5e-3",
+            "--ckpt-dir", ckpt_dir, "--ckpt-every", "10",
+            "--inject-failure-at", "25",
+            "--pack",  # no-padding packed sequences (paper §7.1)
+        ])
+    report = out["report"]
+    print(f"\nrecovered from steps {report.recovered_from}; "
+          f"restarts={report.restarts}; completed={report.completed_steps}")
+    assert report.completed_steps == 60
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.checkpoint.checkpointing import CheckpointManager  # noqa: F401

@@ -1,0 +1,334 @@
+"""Cluster Builder (paper §6): model description -> deployable parallel plan.
+
+The paper's Cluster Builder takes a trained model + JSON cluster/layer
+descriptions and emits per-kernel HLS artifacts wired into Galapagos
+clusters.  The TPU analogue emits, from a ModelConfig + mesh:
+
+  1. a ClusterTopology — the paper's kernel graph (one cluster per layer,
+     gateway kernel 0, per-head compute kernels, inserted GMI kernels).  For
+     ibert-base this reproduces Fig. 14's 39-kernel encoder cluster exactly.
+     It drives the routing-table/deployment benchmarks and documents how the
+     model WOULD be laid out on a kernel-granular spatial fabric.
+  2. a ShardingPlan — PartitionSpecs for every parameter / batch / cache
+     leaf.  This is what the XLA SPMD partitioner consumes; it plays the
+     role Vivado bitstream generation plays in the paper (DESIGN.md §2).
+
+Sharding rules are divisibility-driven: tensor-parallel dims go to `model`,
+FSDP dims to ("pod","data") when divisible, with graceful fallback to
+replication — so every assigned arch (9-head smollm, 151655-vocab internvl2,
+...) gets a coherent plan on the same production mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.cluster import Cluster, ClusterTopology
+
+# ---------------------------------------------------------------------------
+# Part 1: kernel-graph topology (paper-faithful bookkeeping)
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer_kernels(c: Cluster, cfg: ModelConfig,
+                        with_dense_ffn: bool) -> None:
+    """Mirror of Fig. 14: one encoder's kernels (per-head spatial split)."""
+    for name in ("linear_q_quant", "linear_k_quant", "linear_v_quant"):
+        c.add("compute", name)
+    for h in range(cfg.n_heads):
+        c.add("compute", "dotprod_softmax", head=h)
+    for h in range(cfg.n_heads):
+        c.add("compute", "softmax_matmul_quant", head=h)
+    c.add("compute", "linear_o_quant")
+    c.add("compute", "layernorm")
+    if with_dense_ffn:
+        c.add("compute", "linear_ff1_gelu")
+        c.add("compute", "linear_ff2_quant")
+        c.add("compute", "layernorm")
+    c.add("gmi", "scatter")  # split Q/K/V head blocks across head kernels
+    c.add("gmi", "scatter")
+    c.add("gmi", "scatter")
+    c.add("gmi", "gather")  # gather head outputs
+    c.add("gmi", "broadcast")  # residual fan-out
+
+
+def _moe_layer_kernels(c: Cluster, cfg: ModelConfig) -> None:
+    c.add("compute", "router")
+    c.add("gmi", "scatter")  # dispatch (the MoE all-to-all)
+    for e in range(cfg.n_experts):
+        c.add("compute", "expert_ffn", expert=e)
+    for s in range(cfg.n_shared_experts):
+        c.add("compute", "shared_expert_ffn", expert=s)
+    c.add("gmi", "gather")  # combine
+    c.add("compute", "layernorm")
+
+
+def _recurrent_layer_kernels(c: Cluster, kind: str,
+                             with_dense_ffn: bool = False) -> None:
+    c.add("compute", f"{kind}_in_proj")
+    c.add("compute", f"{kind}_cell")
+    c.add("compute", f"{kind}_out_proj")
+    c.add("compute", "layernorm")
+    if with_dense_ffn:
+        c.add("compute", "linear_ff1_gelu")
+        c.add("compute", "linear_ff2_quant")
+        c.add("compute", "layernorm")
+
+
+def build_topology(cfg: ModelConfig) -> ClusterTopology:
+    """One cluster per layer (the paper maps one encoder per cluster)."""
+    topo = ClusterTopology()
+    prev_gateway = None
+    for layer in range(cfg.n_layers):
+        c = topo.new_cluster()
+        kind = cfg.block_kind(layer)
+        is_moe = cfg.is_moe_layer(layer)
+        if kind == "attn":
+            _attn_layer_kernels(c, cfg, with_dense_ffn=not is_moe and
+                                cfg.family != "ssm" and cfg.d_ff > 0)
+        else:
+            _recurrent_layer_kernels(
+                c, kind, with_dense_ffn=cfg.family != "ssm" and cfg.d_ff > 0)
+        if is_moe:
+            _moe_layer_kernels(c, cfg)
+        if prev_gateway is not None:
+            topo.connect(prev_gateway, c.gateway)  # serial encoder chain
+        prev_gateway = c.gateway
+    topo.validate()
+    return topo
+
+
+# ---------------------------------------------------------------------------
+# Part 2: sharding plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MeshAxes:
+    dp: Tuple[str, ...]  # data-parallel axes, e.g. ("pod","data")
+    tp: str = "model"
+
+    @property
+    def all(self) -> Tuple[str, ...]:
+        return self.dp + (self.tp,)
+
+
+@dataclass
+class ClusterPlan:
+    cfg: ModelConfig
+    axes: MeshAxes
+    mesh: Mesh
+    topology: ClusterTopology
+    param_specs: Any = None
+    cache_specs: Any = None
+    data_spec: Any = None
+    notes: List[str] = field(default_factory=list)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+class Rules:
+    """Divisibility-driven spec assignment for one tensor."""
+
+    def __init__(self, mesh: Mesh, axes: MeshAxes, fsdp: bool = True):
+        self.mesh, self.axes = mesh, axes
+        self.tp_n = _axsize(mesh, axes.tp)
+        self.dp_opts: List[Tuple[str, ...]] = []
+        if fsdp:
+            for i in range(len(axes.dp)):
+                self.dp_opts.append(tuple(axes.dp[i:]))  # ("pod","data"),..
+
+    def spec(self, shape: Sequence[int], tp_dim: Optional[int],
+             fsdp_dim: Optional[int], offset: int = 0) -> P:
+        """tp_dim/fsdp_dim are indices into `shape` (post-offset) or None."""
+        parts: List[Any] = [None] * (len(shape) + offset)
+        if tp_dim is not None and shape[tp_dim] % self.tp_n == 0:
+            parts[offset + tp_dim] = self.axes.tp
+        else:
+            tp_dim = None
+        if fsdp_dim is not None and fsdp_dim != tp_dim:
+            for cand in self.dp_opts:
+                n = 1
+                for a in cand:
+                    n *= self.mesh.shape[a]
+                if shape[fsdp_dim] % n == 0:
+                    parts[offset + fsdp_dim] = cand if len(cand) > 1 else cand[0]
+                    break
+        return P(*parts)
+
+
+def _param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+                r: Rules, family: str = "dense") -> P:
+    """Rule table keyed on parameter names (see models/)."""
+    name = path[-1]
+    # int8-serving leaves: "q" shards like its parent weight, "s" replicates
+    if name == "s" and len(path) > 1 and path[-2] in (
+            "wq", "wk", "wv", "wo", "wi", "wg", "shared_wi", "shared_wg",
+            "shared_wo"):
+        return P(*([None] * len(shape)))
+    if name == "q" and len(path) > 1:
+        name = path[-2]
+    in_scan = "scan" in path  # leading stacked layer dim -> never sharded
+    off = 1 if in_scan else 0
+    s = shape[off:]
+    nd = len(s)
+
+    def mk(tp, fsdp):
+        return r.spec(s, tp, fsdp, offset=off)
+
+    # embeddings / head
+    if name in ("tok", "head"):
+        if name == "tok" and s[0] % r.tp_n == 0:
+            return mk(0, 1)  # vocab over model, d over fsdp
+        return mk(1, 0)  # fall back: d over model
+    if name == "pos":
+        return mk(None, None)
+    # sLSTM cell does not tensor-parallelize (per-step state math would
+    # reshard every scan iteration — DESIGN.md §5): its gate projection and
+    # recurrent matrices stay with the (batch-sharded) state
+    if name == "w_in":
+        return mk(None, 0)
+    if name == "r" and nd == 4:
+        return P(*([None] * len(shape)))
+    if name == "w_if":  # mLSTM scalar gates: tiny, replicated
+        return P(*([None] * len(shape)))
+    # attention
+    if name in ("wq", "wk", "wv") and nd == 2:
+        return mk(1, 0)
+    if name == "wo" and nd == 2:
+        return mk(0, 1)
+    if name in ("wq", "wk", "wv") and nd == 3:  # mlstm per-head (nh, ih, dk)
+        return mk(1, None)
+    # mlp / moe
+    if name in ("wi", "wg"):
+        return mk(0 if nd == 3 else 1, 1 if nd == 3 else 0)  # moe: E over model
+    if name == "wo" and nd == 3:
+        return mk(0, 1)
+    if name in ("shared_wi", "shared_wg", "glu_wi", "up_z", "up_g",
+                "w_gate_in", "w_x_in"):
+        return mk(1, 0)
+    if name in ("shared_wo", "glu_wo", "down", "w_out"):
+        return mk(0, 1)
+    if name in ("w_rgate", "w_igate"):
+        # contraction dim on `model` to match the W-sharded conv output —
+        # otherwise XLA all-gathers the (B,S,W) activation (§Perf A2)
+        return mk(0, None)
+    if name == "conv" and nd == 2:
+        return mk(1, None)
+    if name in ("lam",) and nd == 1:
+        return mk(0, None)
+    if name == "router":
+        return mk(None, 0)  # small but scan-stacked: FSDP the d dim
+    # norms, biases, gains
+    return P(*([None] * len(shape)))
+
+
+def _cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], r: Rules,
+                batch: int) -> P:
+    name = path[-1]
+    in_scan = "scan" in path
+    off = 1 if in_scan else 0
+    s = shape[off:]
+    dp = None
+    for cand in r.dp_opts:
+        n = 1
+        for a in cand:
+            n *= r.mesh.shape[a]
+        if s and s[0] % n == 0:
+            dp = cand if len(cand) > 1 else cand[0]
+            break
+    parts: List[Any] = [None] * len(shape)
+    if s:
+        parts[off] = dp  # batch dim
+    if name in ("k", "v") and len(s) == 4:
+        # prefer kv-head TP; else shard head_dim (decode writes at dynamic
+        # seq slots stay shard-local; a seq-sharded cache makes SPMD
+        # replicate the buffer around every cache write — §Perf 0.7).
+        # Small (windowed / short) caches skip TP entirely: the write-side
+        # reshard costs more than replication saves (§Perf A5).
+        import numpy as _np
+        dp_n = 1
+        for cand in r.dp_opts[:1]:
+            for a in cand:
+                dp_n *= r.mesh.shape[a]
+        per_dev_dp_only = int(_np.prod(s)) * 2 / max(dp_n, 1)
+        if per_dev_dp_only > 5e8:
+            if s[2] % r.tp_n == 0:
+                parts[off + 2] = r.axes.tp
+            elif s[3] % r.tp_n == 0:
+                parts[off + 3] = r.axes.tp
+            elif s[1] % r.tp_n == 0:
+                parts[off + 1] = r.axes.tp
+    elif name in ("h", "C") and len(s) >= 2:
+        if s[-1] % r.tp_n == 0:
+            parts[off + len(s) - 1] = r.axes.tp
+    elif name in ("c", "n", "m") and len(s) >= 2 and s[-1] % r.tp_n == 0:
+        parts[off + len(s) - 1] = r.axes.tp
+    elif name == "conv" and len(s) == 3 and s[-1] % r.tp_n == 0:
+        parts[off + 2] = r.axes.tp
+    return P(*parts)
+
+
+def _tree_specs(tree, fn) -> Any:
+    """Map fn(path, aval) over a pytree of ShapeDtypeStructs/arrays."""
+
+    def go(sub, path):
+        if isinstance(sub, dict):
+            return {k: go(v, path + (k,)) for k, v in sub.items()}
+        return fn(path, tuple(sub.shape))
+
+    return go(tree, ())
+
+
+def build_plan(cfg: ModelConfig, mesh: Mesh,
+               params_shape: Any = None,
+               caches_shape: Any = None,
+               batch: int = 0,
+               mode: str = "train") -> ClusterPlan:
+    """The Cluster Builder entry point used by launch/ and tests.
+
+    mode="serve": weights are sharded over `model` only (no FSDP) — there
+    are no gradients, and FSDP'd contraction dims turn every projection
+    into a cross-data all-reduce (§Perf iteration A1: -46%% collective
+    bytes on recurrentgemma prefill).  FSDP is kept when TP-only weights
+    would not fit HBM (the 400B arch: 50GB/chip TP-only).
+    """
+    axes = MeshAxes(
+        dp=tuple(a for a in ("pod", "data") if a in mesh.shape), tp="model"
+    )
+    fsdp = True
+    if mode == "serve":
+        per_chip = cfg.param_count() * 2 / _axsize(mesh, axes.tp)
+        fsdp = per_chip > 8e9  # keep FSDP only when capacity demands it
+    r = Rules(mesh, axes, fsdp=fsdp)
+    plan = ClusterPlan(cfg=cfg, axes=axes, mesh=mesh,
+                       topology=build_topology(cfg))
+    if params_shape is not None:
+        plan.param_specs = _tree_specs(
+            params_shape, lambda p, s: _param_spec(p, s, r, cfg.family))
+    if caches_shape is not None:
+        plan.cache_specs = _tree_specs(
+            caches_shape, lambda p, s: _cache_spec(p, s, r, batch))
+    # batch specs
+    dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
+
+    def tok_spec(b):
+        ok = batch and b % _axsize(mesh, axes.dp) == 0
+        return dp if ok else None
+
+    plan.data_spec = lambda ndim, b: P(*((tok_spec(b),) + (None,) * (ndim - 1)))
+    return plan

@@ -1,0 +1,257 @@
+"""Integer-only I-BERT nonlinearities (Kim et al. 2021), TPU-adapted.
+
+The paper (§2.4, §7) implements Quant/Softmax/LayerNorm/GELU "the same way as
+the software version of I-BERT": second-order polynomial approximations of
+exp/erf and a Newton integer square root, so that the whole encoder runs in
+INT8/INT32 with float touch-points only at scale factors.
+
+TPU adaptation (DESIGN.md §2): the published I-BERT code rides on torch int
+tensors with effectively 64-bit intermediate products.  Pallas TPU integer
+lanes are 32-bit, so nonlinearity *inputs* are requantized to ACT_BITS=12
+bits (|q| <= 2047).  With 12-bit inputs every intermediate below provably
+fits int32 (bounds in comments).  This is a hardware-codesign decision of the
+same kind the paper makes when sizing PEs/BRAM.
+
+Every function here is pure jnp and integer-valued (scales are f32 metadata).
+kernels/ref.py re-exports these as the oracles for the Pallas kernels.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor, _round_half_away
+
+ACT_BITS = 12  # nonlinearity-input precision (TPU int32-safety, see module doc)
+ACT_QMAX = 2 ** (ACT_BITS - 1) - 1  # 2047
+SOFTMAX_OUT_BITS = 14  # probabilities emitted with scale 2**-14
+LN_NORM_SHIFT = 11  # normalized value scale 2**-11
+MIN_RANGE = 0.5  # dynamic-range floor before nonlinearities: keeps S >= ~1.7e-4
+#                 so every polynomial constant below provably fits int32
+
+
+def _to_i32(x: jax.Array) -> jax.Array:
+    """Saturating float->int32 (guards jnp.floor(huge) -> UB casts)."""
+    return jnp.clip(x, -2.147e9, 2.147e9).astype(jnp.int32)
+
+# I-BERT polynomial constants
+_EXP_A, _EXP_B, _EXP_C = 0.35815147, 1.353, 0.344
+_ERF_A, _ERF_B, _ERF_C = -0.2888, -1.769, 1.0
+_LN2 = math.log(2.0)
+_EXP_CLAMP = -30.0  # exp(-30) ~ 9e-14: clamp keeps z*q_ln2 within int32
+
+
+def requantize_to_bits(q: jax.Array, scale: jax.Array, bits: int = ACT_BITS,
+                       axis=None, min_range: float = MIN_RANGE) -> QTensor:
+    """Dynamic-range integer->integer requant (the paper's Quant module).
+
+    amax is taken over the integer values (integer max + one float multiply),
+    matching how the FPGA Quant block tracks ranges.  `min_range` floors the
+    represented real range so downstream polynomial constants stay in int32.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(q))
+    else:
+        amax = jnp.max(jnp.abs(q), axis=axis, keepdims=True)
+    range_f = jnp.maximum(amax.astype(jnp.float32) * scale, min_range)
+    s_out = range_f / qmax
+    ratio = scale / s_out
+    out = _round_half_away(q.astype(jnp.float32) * ratio)
+    return QTensor(jnp.clip(out, -qmax, qmax).astype(jnp.int32), s_out)
+
+
+# ---------------------------------------------------------------------------
+# i-exp  (I-BERT Alg. 2): exp(qS) for q <= 0
+# ---------------------------------------------------------------------------
+
+
+def i_exp(q: jax.Array, scale: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """q: int32 <= 0.  Returns (q_exp >= 0 int32, S_exp f32 scalar).
+
+    Bounds (ACT_BITS=12, S >= ~1e-3): q_ln2 <= ~700, z <= 44, q_b <= ~1.4e3,
+    (p+q_b)^2 <= ~4.4e6, q_c <= ~1e6 -> all << 2^31.
+    """
+    scale = jnp.asarray(scale, jnp.float32)
+    q_clamp = jnp.floor(_EXP_CLAMP / scale).astype(jnp.int32)
+    q = jnp.maximum(q, q_clamp)
+
+    q_ln2 = jnp.maximum(_to_i32(jnp.floor(_LN2 / scale)), 1)
+    z = (-q) // q_ln2  # >= 0
+    p = q + z * q_ln2  # in (-q_ln2, 0]
+
+    q_b = _to_i32(jnp.floor(_EXP_B / scale))
+    q_c = _to_i32(jnp.floor(_EXP_C / (_EXP_A * scale * scale)))
+    t = p + q_b
+    q_l = t * t + q_c  # scale a*S^2
+    q_out = q_l >> z.astype(jnp.int32)  # /2^z (q_l >= 0)
+    s_out = _EXP_A * scale * scale
+    return q_out.astype(jnp.int32), s_out
+
+
+# ---------------------------------------------------------------------------
+# i-sqrt  (I-BERT Alg. 4): integer Newton sqrt with early-stop semantics
+# ---------------------------------------------------------------------------
+
+_ISQRT_ITERS = 20
+
+
+def i_sqrt(n: jax.Array) -> jax.Array:
+    """Elementwise integer sqrt of non-negative int32 (floor-ish, I-BERT Alg.4)."""
+    n = n.astype(jnp.int32)
+    bits = jnp.ceil(jnp.log2(jnp.maximum(n, 1).astype(jnp.float32) + 1.0))
+    x0 = jnp.exp2(jnp.ceil(bits / 2.0)).astype(jnp.int32)
+    x0 = jnp.maximum(x0, 1)
+
+    def body(_, carry):
+        x, done = carry
+        nx = (x + n // jnp.maximum(x, 1)) >> 1
+        newdone = done | (nx >= x)
+        return jnp.where(newdone, x, nx), newdone
+
+    x, _ = jax.lax.fori_loop(
+        0, _ISQRT_ITERS, body, (x0, jnp.zeros_like(n, dtype=bool))
+    )
+    return jnp.where(n == 0, 0, x)
+
+
+# ---------------------------------------------------------------------------
+# i-softmax (I-BERT Alg. 3)
+# ---------------------------------------------------------------------------
+
+
+def i_softmax(q: jax.Array, scale: jax.Array, axis: int = -1,
+              where=None) -> Tuple[jax.Array, jax.Array]:
+    """Integer softmax. q int32 (<= ACT_QMAX range), scale f32.
+
+    Returns (q_p int32 in [0, 2^SOFTMAX_OUT_BITS], S_out = 2^-SOFTMAX_OUT_BITS).
+    `where`: optional bool mask (False entries get probability 0) — used by
+    the no-padding / packed-sequence path (paper §7.1).
+    """
+    if where is not None:
+        # masked positions -> most negative value (exp -> 0 after clamp)
+        neg = jnp.full_like(q, jnp.iinfo(jnp.int32).min // 2)
+        q = jnp.where(where, q, neg)
+    q_max = jnp.max(q, axis=axis, keepdims=True)
+    q_exp, _ = i_exp(q - q_max, scale)
+    if where is not None:
+        q_exp = jnp.where(where, q_exp, 0)
+    q_sum = jnp.sum(q_exp, axis=axis, keepdims=True)  # <= len*q_exp_max; see note
+    q_sum = jnp.maximum(q_sum, 1)
+
+    # int32-safe normalization: scale sum into < 2^16, then fixed-point divide
+    sh = jnp.maximum(
+        jnp.ceil(jnp.log2(q_sum.astype(jnp.float32) + 1.0)) - 16, 0
+    ).astype(jnp.int32)
+    q_e2 = q_exp >> sh
+    q_s2 = jnp.maximum(q_sum >> sh, 1)
+    factor = (2 ** 29) // q_s2  # < 2^14 when q_s2 >= 2^15; <= 2^29 floor-safe
+    prod = q_e2 * factor  # q_e2 <= q_s2 <= 2^16, factor*q_e2 <= 2^29 * (e2/s2)
+    q_out = prod >> (29 - SOFTMAX_OUT_BITS)
+    s_out = jnp.float32(2.0 ** (-SOFTMAX_OUT_BITS))
+    return q_out.astype(jnp.int32), s_out
+
+
+# ---------------------------------------------------------------------------
+# i-erf / i-GELU (I-BERT Alg. 1)
+# ---------------------------------------------------------------------------
+
+
+def i_erf(q: jax.Array, scale: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    scale = jnp.asarray(scale, jnp.float32)
+    q_sgn = jnp.sign(q).astype(jnp.int32)
+    q_abs = jnp.abs(q)
+    q_b = _to_i32(jnp.floor(-_ERF_B / scale))  # positive
+    q_clip = jnp.minimum(q_abs, q_b)
+    q_c = _to_i32(jnp.floor(_ERF_C / (_ERF_A * scale * scale)))  # negative
+    t = q_clip - q_b  # <= 0
+    q_l = t * t + q_c  # scale a*S^2 (a<0 -> value in [-1, 0] * sign flip)
+    s_l = _ERF_A * scale * scale
+    return q_sgn * q_l, s_l
+
+
+def i_gelu(q: jax.Array, scale: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Integer GELU.  q int32 within ACT_BITS range, scale f32.
+
+    GELU(x) = x * Phi(x) with Phi = 0.5(1+erf(x/sqrt2)) in [0,1].  The Phi
+    integer (q_erf + q_one, scale s_erf < 0, so the integer is <= 0) can reach
+    ~2/|s_erf| ~ 5e8 for small scales; a dynamic arithmetic right-shift `g`
+    renormalizes it below 2^19 so the final product with |q| <= 2^11 stays
+    within int32.  The shift amount is derived from a scalar max — the same
+    one-float-op-per-tensor budget the paper's Quant blocks spend.
+    """
+    scale = jnp.asarray(scale, jnp.float32)
+    q_erf, s_erf = i_erf(q, scale / math.sqrt(2.0))
+    q_one = _to_i32(jnp.floor(1.0 / s_erf))  # negative (s_erf < 0)
+    t = q_erf + q_one  # <= 0; value t*s_erf = 1+erf in [0, 2]
+    # analytic bound |t| <= 2/|s_erf| (no data reduction -> kernel is elementwise)
+    tmax = 2.0 / jnp.abs(s_erf)
+    g = jnp.maximum(jnp.ceil(jnp.log2(tmax + 1.0)) - 19.0, 0.0).astype(jnp.int32)
+    q_phi = t >> g  # |q_phi| < 2^19 (arithmetic shift: floor, consistent)
+    q_out = q * q_phi  # |q| <= 2^11 -> |prod| < 2^30
+    s_out = scale * s_erf * jnp.exp2(g.astype(jnp.float32)) / 2.0
+    return q_out.astype(jnp.int32), s_out
+
+
+# ---------------------------------------------------------------------------
+# i-LayerNorm (I-BERT §3.3; paper Fig. 10 LayerNorm modules)
+# ---------------------------------------------------------------------------
+
+
+class LNParams(NamedTuple):
+    q_gamma: jax.Array  # int8-range int32, per-channel
+    s_gamma: jax.Array  # f32 scalar
+    q_beta: jax.Array  # int32, at scale s_out = 2^-LN_NORM_SHIFT * s_gamma
+    s_out: jax.Array  # f32 scalar
+
+
+def layernorm_prepare(gamma: jax.Array, beta: jax.Array) -> LNParams:
+    """Offline float->integer parameter prep (weights side)."""
+    s_g = jnp.maximum(jnp.max(jnp.abs(gamma)), 1e-8) / 127.0
+    q_g = jnp.clip(_round_half_away(gamma / s_g), -127, 127).astype(jnp.int32)
+    s_out = jnp.float32(2.0 ** (-LN_NORM_SHIFT)) * s_g
+    q_b = _round_half_away(beta / s_out).astype(jnp.int32)
+    return LNParams(q_g, jnp.asarray(s_g, jnp.float32), q_b, jnp.asarray(s_out, jnp.float32))
+
+
+def i_layernorm(q8: jax.Array, prep: LNParams, axis: int = -1
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Integer LayerNorm over `axis`.  Input must be int8-range int32.
+
+    LayerNorm is scale-invariant, so the input scale cancels and is not
+    needed.  Bounds (|q8|<=127, H<=8192): sum<=1.05e6, qc^2<=64516,
+    sum(qc^2)<=5.3e8, var<<14 <= 2^31 guarded by var<=2^16.
+    """
+    q = q8.astype(jnp.int32)
+    h = q.shape[axis]
+    mean = jnp.sum(q, axis=axis, keepdims=True) // h
+    qc = q - mean  # |qc| <= 255
+    var = jnp.sum(qc * qc, axis=axis, keepdims=True) // h  # <= 65025
+    std_s = i_sqrt(var << 14)  # ~ std * 2^7 ; var<<14 <= 1.07e9 < 2^31
+    std_s = jnp.maximum(std_s, 1)
+    # qc * 2^(LN_NORM_SHIFT+7) / (std*2^7) = (qc/std) * 2^LN_NORM_SHIFT
+    norm = (qc * (1 << (LN_NORM_SHIFT + 7))) // std_s
+    y = norm * prep.q_gamma + prep.q_beta  # |norm|<=~sqrt(H)*2^11, *127 < 2^31
+    return y.astype(jnp.int32), prep.s_out
+
+
+# ---------------------------------------------------------------------------
+# float oracles (for property tests: how close is integer to real math)
+# ---------------------------------------------------------------------------
+
+
+def f_gelu(x):
+    return x * 0.5 * (1.0 + jax.scipy.special.erf(x / math.sqrt(2.0)))
+
+
+def f_softmax(x, axis=-1):
+    return jax.nn.softmax(x, axis=axis)
+
+
+def f_layernorm(x, gamma, beta, axis=-1):
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    var = jnp.var(x, axis=axis, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-12) * gamma + beta

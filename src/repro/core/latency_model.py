@@ -1,0 +1,63 @@
+"""The paper's pipeline latency model (§8.2.2, Eq. 1 and Fig. 19).
+
+  T_total(L) = T + (L - 1) * (X + d)
+
+  T : latency of one encoder (first input -> last output)
+  X : time until an encoder emits its FIRST output packet
+  d : inter-cluster network hop (switch) latency
+  L : number of serially-connected encoder clusters
+
+The paper measures X, T, I (packet interval) per sequence length on the
+6-FPGA proof-of-concept (Table 1), then projects the 72-FPGA full model
+(Table 2) and the Versal variant (§9, X ~= 0.53 T).  We reproduce the same
+methodology: benchmarks measure our per-encoder T and X, fit the model, and
+the roofline module plays §9's role of projecting onto target hardware.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Sequence
+
+
+@dataclass(frozen=True)
+class StageTiming:
+    T: float  # per-stage total latency (s)
+    X: float  # time-to-first-output (s)
+    d: float  # inter-stage hop latency (s)
+    I: float = 0.0  # steady-state output interval (s)
+
+
+def total_latency(t: StageTiming, n_stages: int) -> float:
+    """Eq. 1."""
+    return t.T + (n_stages - 1) * (t.X + t.d)
+
+
+def throughput(t: StageTiming, items_per_stage_pass: int = 1) -> float:
+    """Steady-state items/s: the pipeline drains at the slowest stage rate
+    (paper §8.2.3: 'overall throughput should be the same as the layers with
+    the lowest throughput')."""
+    return items_per_stage_pass / max(t.T, 1e-12)
+
+
+def fit_x_fraction(x_values: Sequence[float], t_values: Sequence[float]
+                   ) -> float:
+    """X as a fraction of T (the paper's §9 uses X ~= 0.53 T at seq 128)."""
+    num = sum(x * t for x, t in zip(x_values, t_values))
+    den = sum(t * t for t in t_values)
+    return num / max(den, 1e-12)
+
+
+def pipeline_bubble_fraction(n_micro: int, n_stages: int) -> float:
+    """GPipe bubble: (S-1)/(M+S-1) — the TPU-side equivalent of Eq. 1's
+    fill/drain overhead; used to pick microbatch counts in train.py."""
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def estimate_table2(t_by_seq: Dict[int, float], x_by_seq: Dict[int, float],
+                    d: float, n_stages: int) -> Dict[int, float]:
+    """Reproduce the structure of the paper's Table 2 from measured T/X."""
+    return {
+        s: total_latency(StageTiming(T=t_by_seq[s], X=x_by_seq[s], d=d),
+                         n_stages)
+        for s in t_by_seq
+    }

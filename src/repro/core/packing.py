@@ -1,0 +1,96 @@
+"""No-padding adaptation (paper §7.1): buckets + sequence packing.
+
+The paper's PEs iterate only over real tokens, padding just to
+NUM_PE * ceil(M / NUM_PE).  Under XLA's static shapes the equivalents are:
+
+  * `bucket_len`: round a length up to the hardware tile (128 = MXU lanes,
+    standing in for NUM_PE) and pick the smallest pre-compiled bucket —
+    minimum padding, one compiled program per bucket.
+  * `pack_sequences`: first-fit-decreasing packing of many short sequences
+    into fixed (B, S) rows with segment_ids + per-token positions; attention
+    masks cross-segment pairs (models/attention.py), so no FLOPs are spent
+    attending across packed neighbors and utilization ~= sum(len)/B*S.
+
+Both are exercised by the Table-3/Table-4 benchmarks (padding vs no-padding).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+LANE = 128  # MXU lane width == the paper's NUM_PE rounding granularity
+
+
+def bucket_len(length: int, buckets: Sequence[int] = (), lane: int = LANE
+               ) -> int:
+    """Minimum padded length: smallest bucket >= length, else lane-rounded."""
+    for b in sorted(buckets):
+        if length <= b:
+            return b
+    return ((length + lane - 1) // lane) * lane
+
+
+@dataclass
+class Packed:
+    tokens: np.ndarray  # (B, S) int32, 0-padded
+    segment_ids: np.ndarray  # (B, S) int32, -1 on padding
+    positions: np.ndarray  # (B, S) int32, position within own segment
+    n_segments: int
+
+    @property
+    def utilization(self) -> float:
+        return float((self.segment_ids >= 0).mean())
+
+
+def pack_sequences(seqs: List[np.ndarray], row_len: int) -> Packed:
+    """First-fit-decreasing packing into rows of row_len."""
+    order = sorted(range(len(seqs)), key=lambda i: -len(seqs[i]))
+    rows: List[List[int]] = []  # seq indices per row
+    space: List[int] = []
+    for i in order:
+        n = len(seqs[i])
+        if n > row_len:
+            raise ValueError(f"sequence {i} (len {n}) exceeds row {row_len}")
+        placed = False
+        for rix in range(len(rows)):
+            if space[rix] >= n:
+                rows[rix].append(i)
+                space[rix] -= n
+                placed = True
+                break
+        if not placed:
+            rows.append([i])
+            space.append(row_len - n)
+
+    b = len(rows)
+    tokens = np.zeros((b, row_len), np.int32)
+    seg = np.full((b, row_len), -1, np.int32)
+    pos = np.zeros((b, row_len), np.int32)
+    sid = 0
+    for rix, members in enumerate(rows):
+        cur = 0
+        for i in members:
+            n = len(seqs[i])
+            tokens[rix, cur:cur + n] = seqs[i]
+            seg[rix, cur:cur + n] = sid
+            pos[rix, cur:cur + n] = np.arange(n)
+            cur += n
+            sid += 1
+    return Packed(tokens, seg, pos, n_segments=sid)
+
+
+def padded_batch(seqs: List[np.ndarray], row_len: int) -> Packed:
+    """The baseline the paper compares against: one sequence per row,
+    padded to the maximum length."""
+    b = len(seqs)
+    tokens = np.zeros((b, row_len), np.int32)
+    seg = np.full((b, row_len), -1, np.int32)
+    pos = np.zeros((b, row_len), np.int32)
+    for i, s in enumerate(seqs):
+        n = len(s)
+        tokens[i, :n] = s
+        seg[i, :n] = i
+        pos[i, :n] = np.arange(n)
+    return Packed(tokens, seg, pos, n_segments=b)

@@ -1,0 +1,97 @@
+"""Symmetric integer quantization arithmetic (the paper's C4 substrate).
+
+The paper's hardware keeps INT8 operands, INT32 matmul accumulators, and a
+"Quant" module converting INT32→INT8 after every matrix multiply.  I-BERT's
+software reference does the same: integer tensors carry a float32 *scale*
+(per-tensor or per-channel); all heavy math is integer, scaling is the only
+float touch-point.  We mirror that contract exactly so the Pallas kernels and
+the pure-jnp oracles agree bit-for-bit.
+
+Deviation noted in DESIGN.md: the fixed-point (M0, shift) dyadic multiplier
+used by some integer inference stacks needs 64-bit intermediates which Pallas
+TPU integer units do not expose; both kernel and reference therefore use
+float-scale requantization with round-half-away-from-zero, which is what the
+published I-BERT code does too.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN, INT8_MAX = -127, 127  # symmetric: -128 excluded, as in I-BERT
+
+
+class QTensor(NamedTuple):
+    """Integer values + float scale: real = values * scale."""
+
+    values: jax.Array  # int8 or int32
+    scale: jax.Array  # f32 scalar or per-channel (broadcastable)
+
+    @property
+    def dtype(self):
+        return self.values.dtype
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self) -> jax.Array:
+        return self.values.astype(jnp.float32) * self.scale
+
+
+def _round_half_away(x: jax.Array) -> jax.Array:
+    """Round half away from zero (I-BERT / TFLite rounding)."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def compute_scale(x: jax.Array, axis: Optional[int] = None, bits: int = 8) -> jax.Array:
+    """Symmetric scale from dynamic range. axis=None -> per-tensor."""
+    qmax = 2.0 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(amax, 1e-8) / qmax
+
+
+def quantize(x: jax.Array, scale: Optional[jax.Array] = None, axis: Optional[int] = None,
+             bits: int = 8) -> QTensor:
+    if scale is None:
+        scale = compute_scale(x, axis=axis, bits=bits)
+    qmax = 2 ** (bits - 1) - 1
+    q = _round_half_away(x / scale)
+    q = jnp.clip(q, -qmax, qmax)
+    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    return QTensor(q.astype(dtype), jnp.asarray(scale, jnp.float32))
+
+
+def requantize(acc: jax.Array, scale_in: jax.Array, scale_out: jax.Array) -> jax.Array:
+    """INT32 accumulator (scale_in) -> INT8 (scale_out). The paper's Quant module."""
+    ratio = scale_in / scale_out
+    q = _round_half_away(acc.astype(jnp.float32) * ratio)
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def int8_matmul_ref(a: QTensor, b: QTensor, scale_out: Optional[jax.Array] = None):
+    """INT8 x INT8 -> INT32 matmul, optionally requantized to INT8.
+
+    Pure-jnp contract shared with kernels/int8_matmul.py: accumulate in int32
+    via preferred_element_type (MXU-native on TPU).
+    """
+    acc = jax.lax.dot_general(
+        a.values, b.values,
+        (((a.values.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    scale_acc = a.scale * b.scale
+    if scale_out is None:
+        return QTensor(acc, scale_acc)
+    return QTensor(requantize(acc, scale_acc, scale_out), scale_out)
+
+
+def fake_quant(x: jax.Array, axis: Optional[int] = None, bits: int = 8) -> jax.Array:
+    """Quantize-dequantize (used for QAT-style parity checks)."""
+    q = quantize(x, axis=axis, bits=bits)
+    return q.dequantize()

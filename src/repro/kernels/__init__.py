@@ -1,0 +1,4 @@
+# Compute hot-spots the paper optimizes (I-BERT integer encoder, §7):
+# int8 GEMM + Quant, i-Softmax, i-LayerNorm, i-GELU — Pallas TPU kernels with
+# pure-jnp oracles in ref.py and jit'd public wrappers in ops.py.
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: integer GELU (I-BERT i-erf polynomial), elementwise.
+
+Paper Fig. 10 layer 5 (Linear+GELU, Kern_30).  Purely elementwise: the
+dynamic renormalization shift is derived analytically from the scale (see
+ibert_ops.i_gelu), so no cross-tile reduction is needed and tiles can be
+streamed at full VPU width.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.ibert_ops import _ERF_A, _ERF_B, _ERF_C, _to_i32
+
+BLOCK_ROWS = 64
+
+
+def _kernel(x_ref, s_ref, o_ref):
+    q = x_ref[...]
+    scale = s_ref[0, 0]
+    s_e = scale / math.sqrt(2.0)
+    q_sgn = jnp.sign(q)
+    q_b = _to_i32(jnp.floor(-_ERF_B / s_e))
+    q_clip = jnp.minimum(jnp.abs(q), q_b)
+    q_c = _to_i32(jnp.floor(_ERF_C / (_ERF_A * s_e * s_e)))
+    t0 = q_clip - q_b
+    q_erf = q_sgn * (t0 * t0 + q_c)
+    s_erf = _ERF_A * s_e * s_e
+    q_one = _to_i32(jnp.floor(1.0 / s_erf))
+    t = q_erf + q_one
+    tmax = 2.0 / jnp.abs(s_erf)
+    g = jnp.maximum(jnp.ceil(jnp.log2(tmax + 1.0)) - 19.0, 0.0).astype(jnp.int32)
+    o_ref[...] = q * (t >> g)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def i_gelu(q: jax.Array, scale: jax.Array, *, block_rows: int = BLOCK_ROWS,
+           interpret: bool = False) -> jax.Array:
+    """q: (R, C) int32 within ACT_BITS range -> (R, C) int32 (scale per ops.py)."""
+    r, c = q.shape
+    assert r % block_rows == 0, (r, block_rows)
+    return pl.pallas_call(
+        _kernel,
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        interpret=interpret,
+    )(q, scale.reshape(1, 1).astype(jnp.float32))

@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: integer softmax (I-BERT i-exp + fixed-point normalize).
+
+Paper Fig. 10 layer 2 (Softmax modules, Kern_4..15).  Row-blocked: each grid
+step normalizes (block_rows, C) int32 scores held in VMEM.  All math is
+int32; the only float ops are the scale-derived constants and the shift
+selection (one log2 per row), matching ibert_ops.i_softmax bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.ibert_ops import (
+    _EXP_A, _EXP_B, _EXP_C, _EXP_CLAMP, _LN2, SOFTMAX_OUT_BITS, _to_i32,
+)
+
+BLOCK_ROWS = 8
+
+
+def _kernel(x_ref, s_ref, o_ref):
+    q = x_ref[...]
+    scale = s_ref[0, 0]
+    q_max = jnp.max(q, axis=-1, keepdims=True)
+    qn = q - q_max
+    q_clamp = _to_i32(jnp.floor(_EXP_CLAMP / scale))
+    qn = jnp.maximum(qn, q_clamp)
+    q_ln2 = jnp.maximum(_to_i32(jnp.floor(_LN2 / scale)), 1)
+    z = (-qn) // q_ln2
+    p = qn + z * q_ln2
+    q_b = _to_i32(jnp.floor(_EXP_B / scale))
+    q_c = _to_i32(jnp.floor(_EXP_C / (_EXP_A * scale * scale)))
+    t = p + q_b
+    q_exp = (t * t + q_c) >> z
+
+    q_sum = jnp.maximum(jnp.sum(q_exp, axis=-1, keepdims=True), 1)
+    sh = jnp.maximum(
+        jnp.ceil(jnp.log2(q_sum.astype(jnp.float32) + 1.0)) - 16, 0
+    ).astype(jnp.int32)
+    q_e2 = q_exp >> sh
+    q_s2 = jnp.maximum(q_sum >> sh, 1)
+    factor = (2 ** 29) // q_s2
+    o_ref[...] = (q_e2 * factor) >> (29 - SOFTMAX_OUT_BITS)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def i_softmax(q: jax.Array, scale: jax.Array, *, block_rows: int = BLOCK_ROWS,
+              interpret: bool = False) -> jax.Array:
+    """q: (R, C) int32 scores; scale f32 scalar -> (R, C) int32 probs @2^-14."""
+    r, c = q.shape
+    assert r % block_rows == 0, (r, block_rows)
+    return pl.pallas_call(
+        _kernel,
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.int32),
+        interpret=interpret,
+    )(q, scale.reshape(1, 1).astype(jnp.float32))

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: INT8 x INT8 -> INT32 matmul with fused bias + requant.
+
+This is the paper's Linear module (Matrix-Multiply + Bias Addition + Quant,
+§7.1.1) re-tiled for the TPU MXU instead of FPGA DSP tiles:
+
+  * The FPGA design streams the input matrix row-wise through PEs that each
+    hold one weight column in BRAM.  On TPU the analogue is: weight tile
+    resident in VMEM, input tile streamed HBM->VMEM by the pallas grid, MXU
+    consuming 128x128-aligned int8 tiles (int8 matmul is MXU-native).
+  * The paper pads only to NUM_PE multiples; we pad only to tile multiples
+    (done by ops.py), the same minimum-padding idea.
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the int32 accumulator tile stays
+resident in a VMEM scratch across the K loop; bias-add + requantization run
+as a fused epilogue on the final K step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# default tiles: a(bm,bk)+b(bk,bn) int8 = 2*64KB, acc(bm,bn) int32 = 64KB
+BM, BN, BK = 128, 128, 512
+
+
+def _kernel(a_ref, b_ref, sa_ref, sb_ref, so_ref, bias_ref, o_ref, acc_ref, *,
+            n_k: int, requant: bool):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        a_ref[...], b_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...]
+        if bias_ref is not None:
+            acc = acc + bias_ref[...].astype(jnp.int32)
+        if requant:
+            ratio = sa_ref[0, 0] * sb_ref[0, 0] / so_ref[0, 0]
+            x = acc.astype(jnp.float32) * ratio
+            q = jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+            o_ref[...] = jnp.clip(q, -127, 127).astype(jnp.int8)
+        else:
+            o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bn", "bk", "requant", "interpret"),
+)
+def int8_matmul(a: jax.Array, b: jax.Array, s_a: jax.Array, s_b: jax.Array,
+                s_out: Optional[jax.Array] = None,
+                bias: Optional[jax.Array] = None,
+                *, bm: int = BM, bn: int = BN, bk: int = BK,
+                requant: bool = False, interpret: bool = False) -> jax.Array:
+    """a:(M,K) int8, b:(K,N) int8 -> (M,N) int32 (or int8 if requant).
+
+    M,K,N must be multiples of the tile sizes (ops.py pads).  s_a/s_b/s_out
+    are f32 scalars; bias is int32 (N,) at scale s_a*s_b.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"untiled shape {(m, k, n)} vs tiles {(bm, bn, bk)}")
+    n_k = k // bk
+    grid = (m // bm, n // bn, n_k)
+
+    sa2 = s_a.reshape(1, 1).astype(jnp.float32)
+    sb2 = s_b.reshape(1, 1).astype(jnp.float32)
+    so2 = (s_out if s_out is not None else jnp.float32(1.0)).reshape(1, 1)
+    bias2 = bias if bias is not None else None
+
+    out_dtype = jnp.int8 if requant else jnp.int32
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        scalar_spec, scalar_spec, scalar_spec,
+        (pl.BlockSpec((1, bn), lambda i, j, kk: (0, j))
+         if bias2 is not None else None),
+    ]
+    operands = [a, b, sa2, sb2, so2.astype(jnp.float32)]
+    if bias2 is not None:
+        operands.append(bias2.reshape(1, n))
+    else:
+        in_specs = in_specs[:-1]
+
+    kern = functools.partial(_kernel, n_k=n_k, requant=requant)
+    if bias2 is None:
+        kern = lambda a_r, b_r, sa_r, sb_r, so_r, o_r, acc_r: _kernel(  # noqa: E731
+            a_r, b_r, sa_r, sb_r, so_r, None, o_r, acc_r, n_k=n_k, requant=requant)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        # int32 accumulator tile resident in VMEM across the K loop
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(*operands)

@@ -1,0 +1,160 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy: on TPU backends the Pallas kernels run compiled; elsewhere
+they run in interpret mode (exact same kernel body, executed by the Pallas
+interpreter) or fall back to the pure-jnp oracle (`impl="ref"`).  All
+wrappers apply the paper's *minimum padding* rule (§7.1): operands are padded
+only up to the tile granularity the hardware needs (MXU 128 lanes here,
+NUM_PE there) and the padding is stripped from the result.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ibert_ops import LNParams
+from repro.kernels import ref as _ref
+from repro.kernels import int8_matmul as _mm
+from repro.kernels import i_gelu as _ig
+from repro.kernels import i_layernorm as _iln
+from repro.kernels import i_softmax as _ism
+
+_IMPL = None
+
+
+def default_impl() -> str:
+    """'pallas' on TPU, 'interpret' on CPU unless overridden."""
+    global _IMPL
+    if _IMPL is None:
+        _IMPL = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return _IMPL
+
+
+def set_impl(impl: str) -> None:
+    global _IMPL
+    assert impl in ("pallas", "interpret", "ref")
+    _IMPL = impl
+
+
+def _pad_to(x: jax.Array, mult, axis: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def int8_matmul(a: jax.Array, b: jax.Array, s_a, s_b,
+                s_out=None, bias: Optional[jax.Array] = None,
+                impl: Optional[str] = None) -> jax.Array:
+    """Minimum-padded INT8 GEMM (+bias at s_a*s_b, + optional requant to s_out)."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.int8_matmul(a, b, s_a, s_b, bias=bias, s_out=s_out)
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn = min(_mm.BM, _rup(m, 8)), min(_mm.BN, _rup(n, 128))
+    bk = min(_mm.BK, _rup(k, 128))
+    ap = _pad_to(_pad_to(a, bm, 0), bk, 1)
+    bp = _pad_to(_pad_to(b, bk, 0), bn, 1)
+    biasp = _pad_to(bias, bn, 0) if bias is not None else None
+    out = _mm.int8_matmul(
+        ap, bp, jnp.asarray(s_a, jnp.float32), jnp.asarray(s_b, jnp.float32),
+        s_out=None if s_out is None else jnp.asarray(s_out, jnp.float32),
+        bias=biasp, bm=bm, bn=bn, bk=bk,
+        requant=s_out is not None, interpret=impl == "interpret",
+    )
+    return out[:m, :n]
+
+
+def _rup(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def i_gelu(q: jax.Array, scale, impl: Optional[str] = None) -> jax.Array:
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.i_gelu_elem(q, scale)
+    shape = q.shape
+    q2 = q.reshape(-1, shape[-1])
+    rows = q2.shape[0]
+    br = min(_ig.BLOCK_ROWS, rows)
+    q2 = _pad_to(q2, br, 0)
+    out = _ig.i_gelu(q2, jnp.asarray(scale, jnp.float32), block_rows=br,
+                     interpret=impl == "interpret")
+    return out[:rows].reshape(shape)
+
+
+def i_softmax(q: jax.Array, scale, impl: Optional[str] = None) -> jax.Array:
+    """Integer softmax over last axis -> int32 probs at 2^-14."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.i_softmax_rows(q, scale)
+    shape = q.shape
+    q2 = q.reshape(-1, shape[-1])
+    rows = q2.shape[0]
+    br = min(_ism.BLOCK_ROWS, rows)
+    q2 = _pad_to(q2, br, 0)
+    out = _ism.i_softmax(q2, jnp.asarray(scale, jnp.float32), block_rows=br,
+                         interpret=impl == "interpret")
+    return out[:rows].reshape(shape)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True,
+                    impl: Optional[str] = None) -> jax.Array:
+    """Fused flash attention. q:(B,S,H,hd), k/v:(B,S,KVH,hd) -> (B,S,H,hd).
+
+    GQA is handled by repeating per-head views into the kernel's flattened
+    (B*H, S, hd) layout (views, not materialized copies, on TPU); minimum
+    padding to tile multiples per the paper's NUM_PE rule."""
+    impl = impl or default_impl()
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    if impl == "ref":
+        scale = 1.0 / (hd ** 0.5)  # the oracle expects pre-scaled q
+        out = jax.vmap(jax.vmap(
+            lambda qq, kk, vv: _ref.flash_attention(qq * scale, kk, vv,
+                                                    causal),
+            in_axes=(1, 1, 1), out_axes=1))(
+                q, jnp.repeat(k, h // kvh, axis=2),
+                jnp.repeat(v, h // kvh, axis=2))
+        return out
+    from repro.kernels import flash_attention as _fa
+
+    g = h // kvh
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kf = jnp.repeat(k, g, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    vf = jnp.repeat(v, g, axis=2).transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    bq = min(_fa.BQ, _rup(s, 8))
+    bk = min(_fa.BK, _rup(s, 8))
+    pad = (-s) % bq
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad), (0, 0)))
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0)))
+    out = _fa.flash_attention(qf, kf, vf, causal=causal, bq=bq, bk=bk,
+                              kv_len=s, interpret=impl == "interpret")
+    out = out[:, :s].reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    return out
+
+
+def i_layernorm(q8: jax.Array, prep: LNParams, impl: Optional[str] = None):
+    """Integer LayerNorm over last axis. Returns (int32 values, s_out)."""
+    impl = impl or default_impl()
+    if impl == "ref":
+        out = _ref.i_layernorm_rows(q8, prep.q_gamma, prep.q_beta, prep.s_gamma)
+        return out, prep.s_out
+    shape = q8.shape
+    q2 = q8.reshape(-1, shape[-1])
+    rows = q2.shape[0]
+    br = min(_iln.BLOCK_ROWS, rows)
+    q2 = _pad_to(q2, br, 0)
+    out = _iln.i_layernorm(q2, prep.q_gamma, prep.q_beta, block_rows=br,
+                           interpret=impl == "interpret")
+    return out[:rows].reshape(shape), prep.s_out

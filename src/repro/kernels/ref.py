@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each Pallas kernel in kernels/ must agree with the function of the same name
+here — exactly (integer kernels) or to tight tolerance (float kernels).  The
+integer oracles are the I-BERT algorithms from repro.core.ibert_ops; the
+matmul oracle is the INT8xINT8->INT32 contract from repro.core.quant.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ibert_ops as _io
+from repro.core.quant import requantize as _requantize
+
+
+def int8_matmul(a: jax.Array, b: jax.Array, s_a: jax.Array, s_b: jax.Array,
+                bias: Optional[jax.Array] = None,
+                s_out: Optional[jax.Array] = None) -> jax.Array:
+    """INT8 (M,K) x INT8 (K,N) -> INT32 accum (+ int32 bias at scale s_a*s_b),
+    optionally requantized to INT8 at s_out.  The paper's Linear module
+    (Matrix-Multiply + Bias Addition + Quant, Fig. 10 layers 0/4/5)."""
+    acc = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    if bias is not None:
+        acc = acc + bias[None, :]
+    if s_out is None:
+        return acc
+    return _requantize(acc, s_a * s_b, s_out)
+
+
+def i_softmax_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Integer softmax over the last axis; returns int32 probs at 2^-14."""
+    out, _ = _io.i_softmax(q.astype(jnp.int32), scale, axis=-1)
+    return out
+
+
+def i_layernorm_rows(q8: jax.Array, q_gamma: jax.Array, q_beta: jax.Array,
+                     s_gamma: jax.Array) -> jax.Array:
+    """Integer LayerNorm over the last axis (input int8-range int32)."""
+    prep = _io.LNParams(q_gamma, s_gamma, q_beta,
+                        jnp.float32(2.0 ** (-_io.LN_NORM_SHIFT)) * s_gamma)
+    out, _ = _io.i_layernorm(q8.astype(jnp.int32), prep)
+    return out
+
+
+def i_gelu_elem(q: jax.Array, scale: jax.Array) -> jax.Array:
+    out, _ = _io.i_gelu(q.astype(jnp.int32), scale)
+    return out
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True,
+                    segment_ids: Optional[jax.Array] = None) -> jax.Array:
+    """Float attention oracle for the blocked-attention kernel.
+
+    q,k,v: (S, H) per head slice (already scaled by 1/sqrt(d)).  segment_ids
+    implement the paper's no-padding packed sequences (§7.1): tokens attend
+    only within their own segment.
+    """
+    s = jnp.einsum("qh,kh->qk", q, k).astype(jnp.float32)
+    sq, sk = q.shape[0], k.shape[0]
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= jnp.tril(jnp.ones((sq, sk), dtype=bool), k=sk - sq)
+    if segment_ids is not None:
+        qseg, kseg = segment_ids
+        mask &= qseg[:, None] == kseg[None, :]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask, -1, keepdims=True), p, 0.0)
+    return jnp.einsum("qk,kh->qh", p, v.astype(jnp.float32)).astype(q.dtype)

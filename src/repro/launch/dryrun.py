@@ -1,0 +1,297 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before any other import: jax locks the
+#   device count at first init, and the dry-run needs 512 host platform
+#   placeholder devices to build the production meshes.
+
+# Multi-pod dry-run (brief: MULTI-POD DRY-RUN + ROOFLINE ANALYSIS).
+#
+# For every (architecture x shape-cell x mesh): build the Cluster-Builder
+# sharding plan, lower + compile the appropriate step (train_step for
+# train_4k, prefill/serve_step for the inference cells) against
+# ShapeDtypeStruct inputs (no allocation), then record
+# memory_analysis / cost_analysis / HLO-collective bytes into a JSON file
+# that EXPERIMENTS.md and the roofline table are generated from.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch all --cell all \
+#       --mesh both --out experiments/dryrun
+#   (incremental: existing JSONs are skipped unless --force)
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPE_CELLS, get_config, list_archs
+from repro.core.cluster_builder import build_plan
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import init_params, make_model
+from repro.optim.optimizer import cosine_schedule, make_optimizer
+from repro.roofline.analysis import analyze, model_flops, suggest
+from repro.roofline.hlo import collective_bytes
+from repro.roofline.jaxpr_cost import count_costs
+
+
+def input_specs(cfg, cell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = cell.global_batch, cell.seq_len
+    sds = jax.ShapeDtypeStruct
+    if cell.kind == "train":
+        specs: Dict[str, Any] = {"labels": sds((b, s), jnp.int32)}
+        if cfg.frontend != "none":
+            specs["embeds"] = sds((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            specs["tokens"] = sds((b, s), jnp.int32)
+        return specs
+    if cell.kind == "prefill":
+        if cfg.frontend != "none":
+            return {"embeds": sds((b, s, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": sds((b, s), jnp.int32)}
+    # decode: one new token against an s-deep cache
+    return {"token": sds((b,), jnp.int32)}
+
+
+def _ns(mesh, spec):
+    from jax.sharding import NamedSharding
+    return NamedSharding(mesh, spec)
+
+
+def _mem_analysis(compiled) -> Dict[str, float]:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes", "peak_memory_in_bytes",
+                  "host_temp_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = float(v)
+        out["repr"] = str(ma)[:2000]
+    except Exception as e:  # noqa: BLE001
+        out["error"] = repr(e)
+    return out
+
+
+def _cost_analysis(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        return {str(k): float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:  # noqa: BLE001
+        return {"error_repr": 0.0, "_err": repr(e)}  # type: ignore
+
+
+def run_cell(arch: str, cell_name: str, multi_pod: bool,
+             verbose: bool = True, variant: str = "") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[cell_name]
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    rec: Dict[str, Any] = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_name,
+        "kind": cell.kind, "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "variant": variant,
+    }
+    if cell_name in cfg.skip_cells:
+        rec["status"] = "SKIP"
+        rec["skip_reason"] = cfg.skip_reason
+        return rec
+    int8serve = variant == "int8serve" and cell.kind != "train"
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = make_model(cfg)
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    if int8serve:
+        from repro.models.quantized import quantize_params_for_serving
+
+        params_shape = jax.eval_shape(
+            lambda k: quantize_params_for_serving(init_params(cfg, k)),
+            key_sds)
+    else:
+        params_shape = jax.eval_shape(lambda k: init_params(cfg, k), key_sds)
+    b, s = cell.global_batch, cell.seq_len
+
+    caches_shape = None
+    if cell.kind == "decode":
+        caches_shape = jax.eval_shape(lambda: model.init_cache(b, s))
+    plan = build_plan(cfg, mesh, params_shape, caches_shape, batch=b,
+                      mode="train" if cell.kind == "train" else "serve")
+    param_sh = jax.tree.map(lambda sp: _ns(mesh, sp), plan.param_specs)
+
+    ins = input_specs(cfg, cell)
+    data_sh = {k: _ns(mesh, plan.data_spec(len(v.shape), v.shape[0]))
+               for k, v in ins.items()}
+
+    if cell.kind == "train":
+        from repro.launch.train import (
+            default_micro_batches, make_train_step, opt_state_specs,
+            pick_optimizer,
+        )
+        opt_name = pick_optimizer(cfg)
+        rec["optimizer"] = opt_name
+        opt_init, opt_update = make_optimizer(
+            opt_name, cosine_schedule(3e-4, 100, 10000))
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        opt_specs = opt_state_specs(opt_shape, plan.param_specs, mesh)
+        opt_sh = jax.tree.map(lambda sp: _ns(mesh, sp), opt_specs)
+        from jax.sharding import PartitionSpec as P
+        repl = _ns(mesh, P())
+        dp_n = 1
+        for a in plan.axes.dp:
+            dp_n *= mesh.shape[a]
+        n_micro = default_micro_batches(cfg, b, s, dp_n)
+        rec["micro_batches"] = n_micro
+        step = make_train_step(model, opt_update, n_micro=n_micro,
+                               grad_shardings=param_sh)
+        jitted = jax.jit(
+            step, in_shardings=(param_sh, opt_sh, data_sh),
+            out_shardings=(param_sh, opt_sh,
+                           {"loss": repl, "grad_norm": repl}),
+            donate_argnums=(0, 1))
+        args = (params_shape, opt_shape, ins)
+        raw_fn = step
+    elif cell.kind == "prefill":
+        cache_init_shape = jax.eval_shape(lambda: model.init_cache(b, s))
+        cache_plan = build_plan(cfg, mesh, None, cache_init_shape, batch=b,
+                                mode="serve")
+        cache_sh = jax.tree.map(lambda sp: _ns(mesh, sp),
+                                cache_plan.cache_specs)
+        cache_sh["pos"] = _ns(mesh, cache_plan.data_spec(1, b))
+
+        def prefill_step(params, data):
+            caches = model.init_cache(b, s)
+            logits, caches = model.prefill(params, caches, **data)
+            return logits, caches
+
+        jitted = jax.jit(prefill_step, in_shardings=(param_sh, data_sh),
+                         out_shardings=(None, cache_sh))
+        args = (params_shape, ins)
+        raw_fn = prefill_step
+    else:  # decode
+        cache_sh = jax.tree.map(lambda sp: _ns(mesh, sp), plan.cache_specs)
+        cache_sh["pos"] = _ns(mesh, plan.data_spec(1, b))
+
+        def serve_step(params, caches, data):
+            return model.decode_step(params, caches, data["token"])
+
+        jitted = jax.jit(serve_step,
+                         in_shardings=(param_sh, cache_sh, data_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,))
+        args = (params_shape, caches_shape, ins)
+        raw_fn = serve_step
+
+    from repro.models.shard_hints import hints
+    # int8 FSDP weight gathers for MoE training (§Perf B2): the optimized
+    # configuration; the bf16 baseline is recorded in EXPERIMENTS.md §Perf
+    int8_gather = cell.kind == "train" and cfg.n_experts > 0
+    rec["int8_fsdp_gather"] = int8_gather
+    with mesh, hints(mesh, dp_axes=plan.axes.dp, tp_axis=plan.axes.tp,
+                     int8_gather=int8_gather):
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_analysis(compiled)
+    cost = _cost_analysis(compiled)
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    rec["hlo_bytes_len"] = len(hlo)
+    del hlo
+    # deterministic loop-weighted global counts (see roofline/jaxpr_cost.py)
+    jcost = count_costs(raw_fn, *args)
+    rec["jaxpr_cost_global"] = jcost
+
+    chips = 512 if multi_pod else 256
+    mf = model_flops(cfg, cell)
+    terms = analyze(
+        flops_per_device=jcost["flops"] / chips,
+        bytes_per_device=jcost["bytes"] / chips,
+        coll_bytes_per_device=coll.get("total", 0.0),
+        chips=chips, model_flops_total=mf,
+        int8=int8serve,  # int8 serving runs the GEMMs at 2x MXU peak
+    )
+    rec.update({
+        "status": "OK",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "cost_analysis": cost,
+        "collectives": coll,
+        "roofline": terms.as_dict(),
+        "suggestion": suggest(terms),
+    })
+    if verbose:
+        print(f"[{mesh_name}] {arch} x {cell_name}: "
+              f"compile {t_compile:.1f}s, dominant={terms.dominant}, "
+              f"terms(c/m/coll)=({terms.compute_s:.2e}/{terms.memory_s:.2e}/"
+              f"{terms.collective_s:.2e})s frac={terms.roofline_fraction:.3f}")
+        print(mem.get("repr", "")[:400])
+        for k, v in sorted(cost.items()):
+            if isinstance(v, float) and v:
+                print(f"  cost[{k}] = {v:.4g}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--cell", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="'' (baseline) or 'int8serve' (W8A8 serving)")
+    args = ap.parse_args(argv)
+
+    archs = ([a for a in list_archs() if a != "ibert-base"]
+             if args.arch == "all" else args.arch.split(","))
+    cells = (list(SHAPE_CELLS) if args.cell == "all"
+             else args.cell.split(","))
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi in meshes:
+        mname = "multi" if multi else "single"
+        for arch in archs:
+            for cell in cells:
+                suffix = f"__{args.variant}" if args.variant else ""
+                fp = os.path.join(args.out,
+                                  f"{mname}__{arch}__{cell}{suffix}.json")
+                if os.path.exists(fp) and not args.force:
+                    print(f"skip existing {fp}")
+                    continue
+                try:
+                    rec = run_cell(arch, cell, multi, variant=args.variant)
+                except Exception:  # noqa: BLE001
+                    rec = {"arch": arch, "cell": cell, "mesh": mname,
+                           "status": "FAIL",
+                           "traceback": traceback.format_exc()[-4000:]}
+                    failures.append((mname, arch, cell))
+                    print(f"FAIL {mname} {arch} {cell}")
+                    print(rec["traceback"][-1500:])
+                with open(fp, "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("\nall requested dry-run cells OK")
+
+
+if __name__ == "__main__":
+    main()

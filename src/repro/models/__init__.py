@@ -1,0 +1,1 @@
+from repro.models.transformer import Model, init_params, make_model  # noqa: F401

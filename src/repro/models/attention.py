@@ -1,0 +1,295 @@
+"""Attention: GQA/MQA, RoPE, sliding window, KV-chunked online softmax, decode.
+
+Long-prefill shapes (32k) cannot materialize (S,S) score matrices even
+sharded; `_chunked_attention` streams KV blocks through an online-softmax
+scan (flash-attention recurrence expressed in jax.lax so XLA/SPMD can shard
+it; the Pallas-fused variant is a §Perf item).  Decode attends one query row
+against the full cache.  Segment ids implement the paper's no-padding packed
+sequences (§7.1).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import COMPUTE_DTYPE, apply_rope, dense_init
+
+Params = Dict[str, Any]
+
+DENSE_ATTN_MAX_KV = 1024  # above this, use the KV-chunked online-softmax path
+# bigger KV chunks = proportionally fewer (m,l,acc) carry round-trips
+# through HBM in the online-softmax scan (§Perf C2a: the scan-carry traffic
+# dominated the 32k-prefill memory term); 1024 balances that against the
+# checkpointed-backward recompute peak, which grows with chunk size
+KV_CHUNK = 1024
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg) -> Params:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, nh * hd),
+        "wk": dense_init(ks[1], d, nkv * hd),
+        "wv": dense_init(ks[2], d, nkv * hd),
+        "wo": dense_init(ks[3], nh * hd, d),
+    }
+
+
+def _split_heads(x, n):  # (B,S,n*hd) -> (B,S,n,hd)
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _repeat_kv(k, q_per_kv):  # (B,S,nkv,hd) -> (B,S,nh,hd)
+    # retained for reference; the attention paths below use GROUPED einsums
+    # instead — materializing the q_per_kv-expanded KV cache cost up to
+    # 7x cache bytes (deepseek decode: 134 GB/chip, §Perf 0.7)
+    if q_per_kv == 1:
+        return k
+    return jnp.repeat(k, q_per_kv, axis=2)
+
+
+def _mask(sq: int, sk: int, q_pos, k_pos, causal: bool, window: int,
+          q_seg=None, k_seg=None):
+    """(B, sq, sk) bool mask from absolute positions."""
+    m = jnp.ones((q_pos.shape[0], sq, sk), dtype=bool)
+    if causal:
+        m &= q_pos[:, :, None] >= k_pos[:, None, :]
+    if window:
+        m &= q_pos[:, :, None] - k_pos[:, None, :] < window
+    if q_seg is not None:
+        m &= q_seg[:, :, None] == k_seg[:, None, :]
+    return m
+
+
+def _gq_scores(q, k) -> jax.Array:
+    """Grouped scores without expanding KV: q:(B,Sq,H,hd) k:(B,Sk,KVH,hd)
+    -> (B,H,Sq,Sk).  Materializing repeat_kv cost up to 7x cache bytes
+    (deepseek decode: 134 GB/chip, §Perf 0.7)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    q5 = q.reshape(b, sq, kvh, h // kvh, hd)
+    s = jnp.einsum("bqngd,bknd->bngqk", q5, k)
+    return s.reshape(b, h, sq, k.shape[1])
+
+
+def _gq_pv(p, v) -> jax.Array:
+    """p:(B,H,Sq,Sk) x v:(B,Sk,KVH,hd) -> (B,Sq,H,hd), grouped."""
+    b, h, sq, sk = p.shape
+    kvh, hd = v.shape[2], v.shape[3]
+    p5 = p.reshape(b, kvh, h // kvh, sq, sk)
+    out = jnp.einsum("bngqk,bknd->bqngd", p5, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _dense_attention(q, k, v, mask) -> jax.Array:
+    """q:(B,Sq,H,hd) k/v:(B,Sk,KVH,hd) mask:(B,Sq,Sk)."""
+    s = _gq_scores(q, k).astype(jnp.float32)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(mask[:, None], -1, keepdims=True), p, 0.0)
+    return _gq_pv(p.astype(q.dtype), v)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, causal, window,
+                       q_seg=None, k_seg=None) -> jax.Array:
+    """Online-softmax over KV chunks; O(Sq * KV_CHUNK) live scores."""
+    b, sq, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    chunk = min(KV_CHUNK, sk)
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+        if k_seg is not None:
+            k_seg = jnp.pad(k_seg, ((0, 0), (0, pad)), constant_values=-2)
+    n_chunks = k.shape[1] // chunk
+
+    kc = k.reshape(b, n_chunks, chunk, kvh, hd).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, chunk, kvh, hd).swapaxes(0, 1)
+    pc = k_pos.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    sc = (k_seg.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+          if k_seg is not None else None)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        if sc is not None:
+            kx, vx, px, sx = xs
+        else:
+            kx, vx, px = xs
+            sx = None
+        s = _gq_scores(q, kx).astype(jnp.float32)
+        msk = _mask(sq, chunk, q_pos, px, causal, window, q_seg, sx)
+        s = jnp.where(msk[:, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_run * alpha + p.sum(-1)
+        # NB: a bf16 accumulator carry was tried (§Perf C2a-refuted): it
+        # halves carry bytes but compounds rescaling error over 16+ chunks
+        # and flipped greedy tokens in the serving tests — f32 it stays.
+        acc = acc * alpha[..., None] + _gq_pv(
+            p.astype(q.dtype), vx).swapaxes(1, 2).astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, h, sq), NEG_INF, jnp.float32),
+        jnp.zeros((b, h, sq), jnp.float32),
+        jnp.zeros((b, h, sq, hd), jnp.float32),
+    )
+    xs = (kc, vc, pc) + ((sc,) if sc is not None else ())
+    # checkpoint the chunk body: backward recomputes each chunk's scores
+    # instead of saving (B,H,Sq,chunk) residuals per step (flash-attn-style
+    # memory: carries only) — §Perf iteration 1
+    (m_run, l_run, acc), _ = jax.lax.scan(jax.checkpoint(body), init, xs)
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]
+    return out.swapaxes(1, 2).astype(q.dtype)  # (B,Sq,H,hd)
+
+
+def _windowed_attention(q, k, v, q_pos, k_pos, window,
+                        q_seg=None, k_seg=None) -> jax.Array:
+    """Causal sliding-window attention in O(S*2W): query blocks of size W
+    attend only to their own and the previous KV block (§Perf A4 — the
+    full chunked path wastes 8x attention FLOPs at 32k/W=2048)."""
+    b, s, h, hd = q.shape
+    blk = window
+    pad = (-s) % blk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=2**30)
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2**30)
+        if q_seg is not None:
+            q_seg = jnp.pad(q_seg, ((0, 0), (0, pad)), constant_values=-2)
+            k_seg = jnp.pad(k_seg, ((0, 0), (0, pad)), constant_values=-3)
+    nb = q.shape[1] // blk
+
+    def blocks(a):  # (B, nb, blk, ...)
+        return a.reshape(b, nb, blk, *a.shape[2:])
+
+    qb, kb, vb = blocks(q), blocks(k), blocks(v)
+    qpb, kpb = blocks(q_pos), blocks(k_pos)
+    # KV for block i = concat(block i-1, block i); block -1 is zeros/masked
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    kpprev = jnp.concatenate(
+        [jnp.full_like(kpb[:, :1], 2**30), kpb[:, :-1]], axis=1)
+    k2 = jnp.concatenate([kprev, kb], axis=2)  # (B, nb, 2*blk, H, hd)
+    v2 = jnp.concatenate([vprev, vb], axis=2)
+    kp2 = jnp.concatenate([kpprev, kpb], axis=2)
+    if q_seg is not None:
+        qsb, ksb = blocks(q_seg), blocks(k_seg)
+        ksprev = jnp.concatenate(
+            [jnp.full_like(ksb[:, :1], -3), ksb[:, :-1]], axis=1)
+        ks2 = jnp.concatenate([ksprev, ksb], axis=2)
+
+    def one(qc, kc, vc, qp, kp, qs=None, ks=None):
+        msk = _mask(blk, 2 * blk, qp, kp, True, window, qs, ks)
+        return _dense_attention(qc, kc, vc, msk)
+
+    args = (qb, k2, v2, qpb, kp2) + ((qsb, ks2) if q_seg is not None else ())
+    out = jax.vmap(one, in_axes=1, out_axes=1)(*args)
+    return out.reshape(b, nb * blk, h, hd)[:, :s]
+
+
+def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
+              segment_ids: Optional[jax.Array] = None,
+              cache: Optional[Dict[str, jax.Array]] = None,
+              ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Full attention block.
+
+    Training/prefill: cache=None -> self-attention over x.
+    Decode: cache={'k','v','pos'} -> write x's KV at cache['pos'], attend to
+    the whole (ring-buffered if local_window) cache.
+    """
+    from repro.models.layers import dense
+    from repro.models.shard_hints import fsdp_int8_gather, hint
+
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    wq = fsdp_int8_gather(p["wq"], tp_dim=1)  # no-op unless enabled
+    wk = fsdp_int8_gather(p["wk"], tp_dim=1)
+    wv = fsdp_int8_gather(p["wv"], tp_dim=1)
+    # NB: sharding k/v on head_dim to match a TP-sharded cache was tried
+    # (§Perf A5-refuted): the score contraction then needs per-chunk psums,
+    # 3x the collective bytes of the one-off cache-write reshard.
+    q = hint(_split_heads(dense(x, wq), nh), "bshd")
+    k = hint(_split_heads(dense(x, wk), nkv), "bshd")
+    v = hint(_split_heads(dense(x, wv), nkv), "bshd")
+    q = apply_rope(q, positions, cfg.rope_theta) * (1.0 / math.sqrt(hd))
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    window = cfg.local_window
+
+    if cache is None or x.shape[1] > 1:
+        if x.shape[1] <= DENSE_ATTN_MAX_KV:
+            msk = _mask(x.shape[1], x.shape[1], positions, positions,
+                        cfg.causal, window, segment_ids, segment_ids)
+            out = _dense_attention(q, k, v, msk)
+        elif window and cfg.causal and x.shape[1] > 2 * window:
+            out = _windowed_attention(q, k, v, positions, positions,
+                                      window, segment_ids, segment_ids)
+        else:
+            out = _chunked_attention(q, k, v, positions, positions,
+                                     cfg.causal, window, segment_ids,
+                                     segment_ids)
+        if cache is None:
+            new_cache = None
+        else:
+            # prefill: write the (last `slots`) KV + their absolute positions
+            s = x.shape[1]
+            slots = cache["k"].shape[1]
+            take = min(s, slots)
+            kw, vw = k[:, -take:], v[:, -take:]
+            pw = positions[:, -take:].astype(jnp.int32)
+            idx = (jnp.arange(s - take, s, dtype=jnp.int32) % slots
+                   if window else jnp.arange(take, dtype=jnp.int32))
+            ck = cache["k"].at[:, idx].set(kw.astype(cache["k"].dtype))
+            cv = cache["v"].at[:, idx].set(vw.astype(cache["v"].dtype))
+            ckp = cache["kpos"].at[:, idx].set(pw)
+            new_cache = {"k": ck, "v": cv, "kpos": ckp}
+    else:
+        # decode: Sq == 1; the token's absolute position comes from the
+        # model-level counter (positions[:, 0]) — the cache itself is
+        # position-metadata-free apart from per-slot kpos.
+        # Cache writes are vmapped per-row dynamic updates: a scatter whose
+        # batch coord is a scattered dim would make SPMD replicate the whole
+        # KV cache (observed 133 GB/chip on deepseek decode, §Perf 0.7).
+        ck, cv = cache["k"], cache["v"]  # (B,slots,nkv,hd)
+        cpos = positions[:, 0].astype(jnp.int32)
+        slot = (cpos % ck.shape[1]) if window else jnp.minimum(
+            cpos, ck.shape[1] - 1)
+
+        def _dus(buf, start, val):
+            return jax.lax.dynamic_update_slice_in_dim(
+                buf, val[None], start, axis=0)
+
+        ck = jax.vmap(_dus)(ck, slot, k[:, 0].astype(ck.dtype))
+        cv = jax.vmap(_dus)(cv, slot, v[:, 0].astype(cv.dtype))
+        kpos = jax.vmap(_dus)(cache["kpos"], slot, cpos)
+        msk = _mask(1, ck.shape[1], positions, kpos, cfg.causal, window)
+        out = _dense_attention(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                               msk)
+        new_cache = {"k": ck, "v": cv, "kpos": kpos}
+
+    out = out.reshape(x.shape[0], x.shape[1], nh * hd)
+    wo = fsdp_int8_gather(p["wo"], tp_dim=0)
+    return dense(out, wo), new_cache
+
+
+def init_attn_cache(cfg, batch: int, seq_len: int, dtype=COMPUTE_DTYPE):
+    """KV cache; ring buffer of local_window slots when windowed."""
+    slots = min(seq_len, cfg.local_window) if cfg.local_window else seq_len
+    return {
+        "k": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, slots, cfg.n_kv_heads, cfg.head_dim), dtype),
+        # per-slot absolute positions; 2^30 marks never-written slots so the
+        # causal mask excludes them (also excludes padded prompt columns)
+        "kpos": jnp.full((batch, slots), 2**30, jnp.int32),
+    }

@@ -1,0 +1,267 @@
+"""I-BERT encoder — the paper's proof-of-concept model (§7), integer-only.
+
+Mirrors the paper's Fig. 10 six-layer encoder decomposition:
+  L0 Linear(QKV)+Quant  L1 Attention Dot-Product  L2 i-Softmax
+  L3 Softmax MatMul+Quant (+output Linear+Quant)  L4 Add & i-LayerNorm
+  L5 Linear+i-GELU, Linear+Quant                  L6 Add & i-LayerNorm
+
+Activation scales are *calibrated* offline (float forward pass recording
+per-site amax), exactly as I-BERT does, so the runtime integer path uses
+static scales and the Pallas int8 GEMM can fuse its requant epilogue.
+
+The float forward here is simultaneously: the calibration pass, the accuracy
+oracle (the paper validates bit-parity against the software I-BERT), and the
+FP baseline for the paper-table benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import ibert_ops as iops
+from repro.core.quant import QTensor, quantize, requantize
+from repro.kernels import ops as kops
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# float parameters & forward (calibration + oracle)
+# ---------------------------------------------------------------------------
+
+
+def init_ibert_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    d, f, v, m = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.max_seq_len
+    ks = iter(jax.random.split(key, 8 + 10 * cfg.n_layers))
+
+    def lin(d_in, d_out):
+        return {
+            "w": jax.random.normal(next(ks), (d_in, d_out), jnp.float32)
+            / math.sqrt(d_in),
+            "b": jnp.zeros((d_out,), jnp.float32),
+        }
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "wq": lin(d, d), "wk": lin(d, d), "wv": lin(d, d), "wo": lin(d, d),
+            "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+            "w1": lin(d, f), "w2": lin(f, d),
+            "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        })
+    return {
+        "tok": jax.random.normal(next(ks), (v, d), jnp.float32) * 0.02,
+        "pos": jax.random.normal(next(ks), (m, d), jnp.float32) * 0.02,
+        "emb_ln": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "layers": {str(i): l for i, l in enumerate(layers)},
+    }
+
+
+def _f_ln(x, p):
+    mu = jnp.mean(x, -1, keepdims=True)
+    var = jnp.var(x, -1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-12) * p["g"] + p["b"]
+
+
+def ibert_float_forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                        mask: Optional[jax.Array] = None,
+                        record: Optional[Dict[str, jax.Array]] = None):
+    """Float oracle. `record` (if a dict) collects per-site amax for calibration."""
+
+    def rec(name, x):
+        if record is not None:
+            record[name] = jnp.max(jnp.abs(x))
+        return x
+
+    b, s = tokens.shape
+    h = params["tok"][tokens] + params["pos"][:s][None]
+    h = _f_ln(h, params["emb_ln"])
+    rec("emb", h)
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    if mask is None:
+        mask = jnp.ones((b, s), bool)
+    amask = mask[:, None, None, :]  # (B,1,1,S)
+
+    for i in range(cfg.n_layers):
+        lp = params["layers"][str(i)]
+        q = rec(f"L{i}.q", h @ lp["wq"]["w"] + lp["wq"]["b"])
+        k = rec(f"L{i}.k", h @ lp["wk"]["w"] + lp["wk"]["b"])
+        v = rec(f"L{i}.v", h @ lp["wv"]["w"] + lp["wv"]["b"])
+        qh = q.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        kh = k.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        vh = v.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        scores = rec(f"L{i}.scores",
+                     jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / math.sqrt(hd))
+        scores = jnp.where(amask, scores, -1e30)
+        probs = jax.nn.softmax(scores, -1)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, vh)
+        ctx = rec(f"L{i}.ctx", ctx.transpose(0, 2, 1, 3).reshape(b, s, -1))
+        attn = rec(f"L{i}.attn", ctx @ lp["wo"]["w"] + lp["wo"]["b"])
+        h = rec(f"L{i}.res1", h + attn)
+        h = _f_ln(h, lp["ln1"])
+        rec(f"L{i}.ln1", h)
+        ff = rec(f"L{i}.ff1", h @ lp["w1"]["w"] + lp["w1"]["b"])
+        ff = rec(f"L{i}.gelu", iops.f_gelu(ff))
+        ff = rec(f"L{i}.ff2", ff @ lp["w2"]["w"] + lp["w2"]["b"])
+        h = rec(f"L{i}.res2", h + ff)
+        h = _f_ln(h, lp["ln2"])
+        rec(f"L{i}.ln2", h)
+    return h
+
+
+def calibrate(params: Params, cfg: ModelConfig, tokens: jax.Array,
+              mask: Optional[jax.Array] = None) -> Dict[str, jax.Array]:
+    record: Dict[str, jax.Array] = {}
+    ibert_float_forward(params, cfg, tokens, mask, record)
+    return {k: jnp.maximum(v, 1e-3) for k, v in record.items()}
+
+
+# ---------------------------------------------------------------------------
+# integer parameter preparation
+# ---------------------------------------------------------------------------
+
+
+def _scale_of(amax) -> jax.Array:
+    return jnp.asarray(amax, jnp.float32) / 127.0
+
+
+def _q_lin(lin: Params, s_in: jax.Array):
+    w = quantize(lin["w"])
+    b_int = jnp.round(lin["b"] / (s_in * w.scale)).astype(jnp.int32)
+    return {"w": w.values, "s_w": w.scale, "b": b_int}
+
+
+def quantize_ibert(params: Params, cfg: ModelConfig,
+                   act: Dict[str, jax.Array]) -> Params:
+    """Float params + calibrated amaxes -> integer weights & static scales."""
+    qp: Params = {
+        "tok": params["tok"], "pos": params["pos"], "emb_ln": params["emb_ln"],
+        "s_emb": _scale_of(act["emb"]), "layers": {}, "act": act,
+    }
+    for i in range(cfg.n_layers):
+        lp = params["layers"][str(i)]
+        s_emb_or_ln = _scale_of(act["emb"] if i == 0 else act[f"L{i-1}.ln2"])
+        s_ln1 = _scale_of(act[f"L{i}.ln1"])
+        ql = {
+            "wq": _q_lin(lp["wq"], s_emb_or_ln),
+            "wk": _q_lin(lp["wk"], s_emb_or_ln),
+            "wv": _q_lin(lp["wv"], s_emb_or_ln),
+            "wo": _q_lin(lp["wo"], _scale_of(act[f"L{i}.ctx"])),
+            "w1": _q_lin(lp["w1"], s_ln1),
+            "w2": _q_lin(lp["w2"], _scale_of(act[f"L{i}.gelu"])),
+            "ln1": iops.layernorm_prepare(lp["ln1"]["g"], lp["ln1"]["b"]),
+            "ln2": iops.layernorm_prepare(lp["ln2"]["g"], lp["ln2"]["b"]),
+        }
+        qp["layers"][str(i)] = ql
+    return qp
+
+
+# ---------------------------------------------------------------------------
+# integer forward (runs on the Pallas kernels)
+# ---------------------------------------------------------------------------
+
+
+def _mm(x: QTensor, ql: Params, s_out, impl) -> QTensor:
+    """int8 GEMM + bias + requant to s_out over collapsed leading dims."""
+    lead = x.values.shape[:-1]
+    a2 = x.values.reshape(-1, x.values.shape[-1])
+    out = kops.int8_matmul(a2, ql["w"], x.scale, ql["s_w"],
+                           s_out=s_out, bias=ql["b"], impl=impl)
+    return QTensor(out.reshape(*lead, -1), jnp.asarray(s_out, jnp.float32))
+
+
+def ibert_int_forward(qp: Params, cfg: ModelConfig, tokens: jax.Array,
+                      mask: Optional[jax.Array] = None,
+                      impl: Optional[str] = None) -> QTensor:
+    """Integer-only encoder stack; returns final hidden as QTensor."""
+    b, s = tokens.shape
+    act = qp["act"]
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    if mask is None:
+        mask = jnp.ones((b, s), bool)
+
+    h = qp["tok"][tokens] + qp["pos"][:s][None]
+    h = _f_ln(h, qp["emb_ln"])  # embedding block stays float (paper §2.3:
+    # embedding is done by the input-preprocessing FPGAs, encoders are integer)
+    x = quantize(h, scale=qp["s_emb"])  # int8 entry point into the encoder
+
+    for i in range(cfg.n_layers):
+        ql = qp["layers"][str(i)]
+        s_q = _scale_of(act[f"L{i}.q"])
+        s_k = _scale_of(act[f"L{i}.k"])
+        s_v = _scale_of(act[f"L{i}.v"])
+        q = _mm(x, ql["wq"], s_q, impl)
+        k = _mm(x, ql["wk"], s_k, impl)
+        v = _mm(x, ql["wv"], s_v, impl)
+
+        qh = q.values.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        kh = k.values.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        # L1: attention dot-product (int8 x int8 -> int32)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", qh.astype(jnp.int32),
+                            kh.astype(jnp.int32))
+        s_scores = s_q * s_k / math.sqrt(hd)  # fold 1/sqrt(hd) into scale
+        # requant scores to ACT_BITS for the i-softmax polynomial (static)
+        s_sm_in = _scale_of(act[f"L{i}.scores"]) * (127.0 / iops.ACT_QMAX)
+        sc = jnp.clip(jnp.round(scores.astype(jnp.float32)
+                                * (s_scores / s_sm_in)),
+                      -iops.ACT_QMAX, iops.ACT_QMAX).astype(jnp.int32)
+        sc = jnp.where(mask[:, None, None, :], sc,
+                       jnp.floor(iops._EXP_CLAMP / s_sm_in).astype(jnp.int32))
+        # L2: i-softmax
+        probs = kops.i_softmax(sc.reshape(-1, s), s_sm_in, impl=impl)
+        probs = probs.reshape(b, nh, s, s)
+        # probs at 2^-14 -> int8 at 2^-7
+        p8 = (probs >> 7).astype(jnp.int8)
+        s_p = jnp.float32(2.0 ** -7)
+        # L3: softmax matmul (int8 probs x int8 v)
+        vh = v.values.reshape(b, s, nh, hd).transpose(0, 2, 1, 3)
+        ctx = jnp.einsum("bhqk,bhkd->bhqd", p8.astype(jnp.int32),
+                         vh.astype(jnp.int32))
+        s_ctx = _scale_of(act[f"L{i}.ctx"])
+        ctx8 = requantize(ctx, s_p * s_v, s_ctx)
+        ctx8 = ctx8.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        attn = _mm(QTensor(ctx8, s_ctx), ql["wo"],
+                   _scale_of(act[f"L{i}.attn"]), impl)
+
+        # L4: residual add (common scale) + i-LayerNorm
+        s_res = _scale_of(act[f"L{i}.res1"])
+        r = (requantize(x.values.astype(jnp.int32), x.scale, s_res)
+             .astype(jnp.int32)
+             + requantize(attn.values.astype(jnp.int32), attn.scale, s_res)
+             .astype(jnp.int32))
+        ln1, s_ln1v = kops.i_layernorm(r, ql["ln1"], impl=impl)
+        x = QTensor(requantize(ln1, s_ln1v, _scale_of(act[f"L{i}.ln1"])),
+                    _scale_of(act[f"L{i}.ln1"]))
+
+        # L5: FFN with i-GELU
+        s_ff1 = jnp.maximum(_scale_of(act[f"L{i}.ff1"]), 1e-6) \
+            * (127.0 / iops.ACT_QMAX)
+        a2 = x.values.reshape(-1, cfg.d_model)
+        acc = kops.int8_matmul(a2, ql["w1"]["w"], x.scale, ql["w1"]["s_w"],
+                               bias=ql["w1"]["b"], impl=impl)
+        ff = jnp.clip(jnp.round(acc.astype(jnp.float32)
+                                * (x.scale * ql["w1"]["s_w"] / s_ff1)),
+                      -iops.ACT_QMAX, iops.ACT_QMAX).astype(jnp.int32)
+        g = kops.i_gelu(ff, s_ff1, impl=impl)
+        _, s_g = iops.i_gelu(jnp.zeros((1,), jnp.int32), s_ff1)
+        g8 = requantize(g, s_g, _scale_of(act[f"L{i}.gelu"]))
+        g8 = g8.reshape(b, s, cfg.d_ff)
+        ff2 = _mm(QTensor(g8, _scale_of(act[f"L{i}.gelu"])), ql["w2"],
+                  _scale_of(act[f"L{i}.ff2"]), impl)
+
+        # L6: residual + i-LayerNorm
+        s_res2 = _scale_of(act[f"L{i}.res2"])
+        r2 = (requantize(x.values.astype(jnp.int32), x.scale, s_res2)
+              .astype(jnp.int32)
+              + requantize(ff2.values.astype(jnp.int32), ff2.scale, s_res2)
+              .astype(jnp.int32))
+        ln2, s_ln2v = kops.i_layernorm(r2, ql["ln2"], impl=impl)
+        x = QTensor(requantize(ln2, s_ln2v, _scale_of(act[f"L{i}.ln2"])),
+                    _scale_of(act[f"L{i}.ln2"]))
+    return x

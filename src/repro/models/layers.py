@@ -1,0 +1,177 @@
+"""Shared float layers: norms, RoPE, MLPs, embeddings, chunked cross-entropy.
+
+Parameters are plain pytrees (nested dicts of jnp arrays) so the Cluster
+Builder can attach PartitionSpecs by path without framework indirection.
+Compute dtype is bf16 with f32 reductions (softmax/norm/loss), the standard
+TPU mixed-precision contract.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, d_in: int, d_out: int, scale: Optional[float] = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(
+        COMPUTE_DTYPE
+    )
+
+
+def dense(x: jax.Array, w) -> jax.Array:
+    if isinstance(w, dict) and "q" in w:  # int8 serving path (§Perf C)
+        from repro.models.quantized import qdense
+        return qdense(x, w)
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+def rmsnorm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(x: jax.Array, p: Params, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return ((xf * rms) * p["g"]).astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(x: jax.Array, p: Params, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+    return y.astype(x.dtype)
+
+
+def norm_init(cfg, d: Optional[int] = None):
+    d = d or cfg.d_model
+    return layernorm_init(d) if cfg.norm == "layernorm" else rmsnorm_init(d)
+
+
+def norm(x, p, cfg):
+    return layernorm(x, p) if cfg.norm == "layernorm" else rmsnorm(x, p)
+
+
+# -- RoPE -------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLP --------------------------------------------------------------------
+
+
+def act_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def mlp_init(key, cfg, d_ff: Optional[int] = None) -> Params:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], cfg.d_model, d_ff),
+         "wo": dense_init(ks[1], d_ff, cfg.d_model)}
+    if cfg.mlp_style == "swiglu":
+        p["wg"] = dense_init(ks[2], cfg.d_model, d_ff)
+    return p
+
+
+def mlp(x: jax.Array, p: Params, cfg) -> jax.Array:
+    from repro.models.shard_hints import fsdp_int8_gather, hint
+
+    a = act_fn(cfg.act)
+    wi = fsdp_int8_gather(p["wi"], tp_dim=1)  # no-op unless enabled
+    wo = fsdp_int8_gather(p["wo"], tp_dim=0)
+    h = hint(dense(x, wi), "btf")
+    if cfg.mlp_style == "swiglu":
+        h = a(hint(dense(x, fsdp_int8_gather(p["wg"], tp_dim=1)), "btf")) * h
+    else:
+        h = a(h)
+    return dense(h, wo)
+
+
+# -- embedding / head -------------------------------------------------------
+
+
+def embed_init(key, cfg) -> Params:
+    p = {"tok": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model), jnp.float32)
+                 * 0.02).astype(COMPUTE_DTYPE)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(jax.random.fold_in(key, 1), cfg.d_model,
+                               cfg.vocab_size, scale=0.02)
+    return p
+
+
+def embed(tokens: jax.Array, p: Params) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_head(h: jax.Array, p: Params) -> jax.Array:
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    return jnp.einsum("...d,dv->...v", h, w).astype(jnp.float32)
+
+
+# -- loss -------------------------------------------------------------------
+
+
+def cross_entropy_chunked(h: jax.Array, labels: jax.Array, embed_p: Params,
+                          chunk: int = 512) -> jax.Array:
+    """Mean next-token CE without materializing (B,S,V) logits.
+
+    Scans over sequence chunks: peak logits footprint is (B, chunk, V),
+    which keeps the 256k-vocab archs within per-chip HBM (DESIGN.md §3).
+    """
+    b, s, _ = h.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = h.shape[1] // chunk
+    hc = h.reshape(b, n_chunks, chunk, -1).swapaxes(0, 1)
+    lc = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        from repro.models.shard_hints import hint
+
+        hx, lx = xs
+        logits = hint(lm_head(hx, embed_p), "btv")  # (B, chunk, V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lx, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lx >= 0
+        nll = jnp.where(valid, logz - gold, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0.0), jnp.int32(0)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1)

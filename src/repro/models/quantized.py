@@ -1,0 +1,77 @@
+"""W8A8 int8 serving path (§Perf C — the paper's I-BERT technique applied
+to the assigned LM archs at datacenter scale).
+
+Weights are quantized OFFLINE (per-output-channel symmetric int8, stored as
+{"q": int8, "s": f32}); activations are quantized dynamically per tensor at
+each projection; the matmul runs int8 x int8 -> int32 on the MXU (2x bf16
+peak on v5e) and dequantizes into bf16.  Attention math (softmax, RoPE) and
+the LM head stay bf16 — the I-BERT recipe's integer heavy-math/float
+touch-point split.
+
+models/layers.dense() dispatches here when it sees a quantized leaf, so the
+whole backbone picks this up when params are converted with
+`quantize_params_for_serving`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+# leaves that carry the serving-critical GEMMs (2D attention/MLP
+# projections; 3D MoE expert tensors and recurrent-cell projections stay
+# bf16 in this iteration — noted in EXPERIMENTS.md §Perf C)
+QUANT_NAMES = ("wq", "wk", "wv", "wo", "wi", "wg", "shared_wi", "shared_wg",
+               "shared_wo")
+
+
+def quantize_leaf(w: jax.Array) -> Dict[str, jax.Array]:
+    """Per-output-channel (last dim) symmetric int8."""
+    amax = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2,
+                               keepdims=True), 1e-8)
+    s = amax / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -127, 127
+                 ).astype(jnp.int8)
+    return {"q": q, "s": s.astype(jnp.float32)}
+
+
+def quantize_params_for_serving(params: Any) -> Any:
+    """Offline conversion: every QUANT_NAMES >=2D leaf -> {"q","s"}."""
+
+    def go(tree, path=()):
+        if isinstance(tree, dict):
+            return {k: go(v, path + (k,)) for k, v in tree.items()}
+        name = path[-1] if path else ""
+        if name in QUANT_NAMES and hasattr(tree, "ndim") and tree.ndim == 2:
+            return quantize_leaf(tree)
+        return tree
+
+    return go(params)
+
+
+def is_quantized(w: Any) -> bool:
+    return isinstance(w, dict) and "q" in w and "s" in w
+
+
+def qdense(x: jax.Array, w: Dict[str, jax.Array]) -> jax.Array:
+    """dynamic-A8 x static-W8 -> int32 -> bf16 (per-tensor act scale).
+
+    The int8 operand and int32 accumulator are pinned batch-sharded /
+    feature-sharded: SPMD's int8 dot partitioning is weaker than f32/bf16
+    and gathers operands without the constraints (§Perf C2b)."""
+    from repro.models.shard_hints import hint
+
+    ax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-8)
+    s_x = ax / 127.0
+    x8 = jnp.clip(jnp.round(x.astype(jnp.float32) / s_x), -127, 127
+                  ).astype(jnp.int8)
+    if x8.ndim == 3:
+        x8 = hint(x8, "btd")
+    acc = jax.lax.dot_general(
+        x8, w["q"],
+        (((x.ndim - 1,), (w["q"].ndim - 2,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    if acc.ndim == 3:
+        acc = hint(acc, "btf")
+    return (acc.astype(jnp.float32) * (s_x * w["s"])).astype(jnp.bfloat16)

@@ -1,0 +1,371 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/RecurrentGemma) and xLSTM cells.
+
+These are the sub-quadratic archs that run the long_500k cell.  Training and
+prefill use parallel forms (associative scan for RG-LRU, chunkwise-parallel
+stabilized recurrence for mLSTM); decode is O(1)-state single-step.
+
+Simplifications vs the source papers (noted in DESIGN.md): mLSTM omits the
+pre-QK causal conv; block-diagonal per-head projections follow the xLSTM-1.3B
+resource shape.  The chunked mLSTM carries the xLSTM max-stabilizer `m`
+across chunks, so long sequences do not under/overflow.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.shard_hints import hint
+
+Params = Dict[str, Any]
+
+MLSTM_CHUNK = 128
+_RGLRU_C = 8.0
+
+
+# ===========================================================================
+# RG-LRU (Griffin) recurrent block
+# ===========================================================================
+
+
+def rglru_init(key, cfg) -> Params:
+    d, w, cw = cfg.d_model, cfg.rnn_width or cfg.d_model, cfg.conv_width
+    ks = jax.random.split(key, 7)
+    # Lambda init so a = sigmoid(L) ^ c in [0.9, 0.999] (Griffin app. A)
+    u = jax.random.uniform(ks[6], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1 / _RGLRU_C) / (1 - u ** (1 / _RGLRU_C)))
+    return {
+        "w_gate_in": dense_init(ks[0], d, w),
+        "w_x_in": dense_init(ks[1], d, w),
+        "conv": (jax.random.normal(ks[2], (cw, w), jnp.float32) * 0.02
+                 ).astype(jnp.float32),
+        "w_rgate": dense_init(ks[3], w, w),
+        "w_igate": dense_init(ks[4], w, w),
+        "w_out": dense_init(ks[5], w, d),
+        "lam": lam,
+    }
+
+
+def _causal_conv(x: jax.Array, conv: jax.Array,
+                 state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x:(B,S,W), conv:(cw,W), state:(B,cw-1,W)."""
+    cw = conv.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1, x.shape[2]), x.dtype)
+    ext = jnp.concatenate([state, x], axis=1)
+    out = sum(ext[:, i : i + x.shape[1]] * conv[cw - 1 - i]
+              for i in range(cw))
+    new_state = ext[:, -(cw - 1):] if cw > 1 else state
+    return out.astype(x.dtype), new_state
+
+
+def _rglru_scan(a: jax.Array, b: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis=1."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(x: jax.Array, p: Params, cfg,
+                state: Optional[Params] = None,
+                valid: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """Griffin recurrent block. x:(B,S,D). state={'h','conv'} for decode.
+
+    valid: (B,S) bool — False (pad) steps leave the state untouched
+    (a=1, b=0), the recurrent form of the paper's no-padding rule."""
+    gate = jax.nn.gelu(hint(jnp.einsum("bsd,dw->bsw", x, p["w_gate_in"]),
+                            "btf"))
+    xi_raw = hint(jnp.einsum("bsd,dw->bsw", x, p["w_x_in"]), "btf")
+    conv_state = state["conv"] if state is not None else None
+    xi, new_conv = _causal_conv(xi_raw, p["conv"], conv_state)
+    if valid is not None and state is not None and x.shape[1] > 1:
+        # prefill with trailing pads: the decode conv state must hold the
+        # last *valid* inputs, not the pad columns
+        cw1 = p["conv"].shape[0] - 1
+        lengths = jnp.sum(valid.astype(jnp.int32), axis=1)  # (B,)
+        gather = jnp.maximum(
+            lengths[:, None] - cw1 + jnp.arange(cw1)[None, :], 0)
+        new_conv = jnp.take_along_axis(
+            xi_raw, gather[..., None], axis=1).astype(new_conv.dtype)
+
+    xf = xi.astype(jnp.float32)
+    # gate matmuls emit bf16 (MXU accumulates f32 internally), so the TP
+    # reduction at the contraction boundary moves bf16 not f32 (§Perf A2);
+    # the sigmoid itself runs in f32
+    r = jax.nn.sigmoid(hint(jnp.einsum("bsw,wv->bsv", xi, p["w_rgate"]),
+                            "btf").astype(jnp.float32))
+    i = jax.nn.sigmoid(hint(jnp.einsum("bsw,wv->bsv", xi, p["w_igate"]),
+                            "btf").astype(jnp.float32))
+    log_a = _RGLRU_C * r * jax.nn.log_sigmoid(p["lam"])  # (B,S,W) <= 0
+    if valid is not None:
+        log_a = jnp.where(valid[..., None], log_a, 0.0)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * xf)
+    if valid is not None:
+        b = jnp.where(valid[..., None], b, 0.0)
+
+    if state is None:
+        h = _rglru_scan(a, b)
+        new_state = None
+    elif x.shape[1] == 1:
+        h = a * state["h"][:, None, :] + b  # decode
+        new_state = {"h": h[:, -1], "conv": new_conv}
+    else:
+        # prefill-with-state: fold h0 into the first step, then scan
+        b = b.at[:, 0].add(a[:, 0] * state["h"])
+        h = _rglru_scan(a, b)
+        new_state = {"h": h[:, -1], "conv": new_conv}
+    y = (gate.astype(jnp.float32) * h).astype(x.dtype)
+    return jnp.einsum("bsw,wd->bsd", y, p["w_out"]), new_state
+
+
+def init_rglru_state(cfg, batch: int):
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.bfloat16),
+    }
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix-memory cell), chunkwise-parallel
+# ===========================================================================
+
+
+def mlstm_init(key, cfg) -> Params:
+    d = cfg.d_model
+    inner = int(cfg.proj_factor * d)
+    nh = cfg.n_heads
+    ih = inner // nh
+    dk = ih // 2
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(ih)
+    return {
+        "up_z": dense_init(ks[0], d, inner),
+        "up_g": dense_init(ks[1], d, inner),
+        "wq": (jax.random.normal(ks[2], (nh, ih, dk)) * s).astype(jnp.bfloat16),
+        "wk": (jax.random.normal(ks[3], (nh, ih, dk)) * s).astype(jnp.bfloat16),
+        "wv": (jax.random.normal(ks[4], (nh, ih, ih)) * s).astype(jnp.bfloat16),
+        "w_if": dense_init(ks[5], d, 2 * nh),  # input & forget gate logits
+        "down": dense_init(ks[6], inner, d),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, carry):
+    """One chunk of stabilized mLSTM.
+
+    q,k:(B,T,nh,dk) v:(B,T,nh,ih) li/lf:(B,T,nh) logs.
+    carry = (C:(B,nh,dk,ih), n:(B,nh,dk), m:(B,nh)).
+    """
+    C, n, m = carry
+    bsz, t, nh, dk = q.shape
+    b = jnp.cumsum(lf, axis=1)  # (B,T,nh) inclusive cumsum of logsigmoid(f)
+    # log intra decay D_ij = b_i - b_j + li_j (j <= i)
+    dmat = b[:, :, None] - b[:, None, :] + li[:, None, :]  # (B,T,T,nh)
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    m_intra = jnp.max(dmat, axis=2)  # (B,T,nh)
+    m_inter = b + m[:, None, :]
+    m_i = jnp.maximum(m_inter, m_intra)  # running stabilizer per step
+
+    dint = jnp.exp(dmat - m_i[:, :, None])  # (B,T,T,nh)
+    s = jnp.einsum("binK,bjnK->bijn", q.astype(jnp.float32),
+                   k.astype(jnp.float32))
+    sw = s * dint
+    num = jnp.einsum("bijn,bjnh->binh", sw, v.astype(jnp.float32))
+    den = jnp.sum(sw, axis=2)  # (B,T,nh): sum_j D~_ij (q_i . k_j)
+
+    winter = jnp.exp(m_inter - m_i)  # (B,T,nh)
+    num = num + winter[..., None] * jnp.einsum(
+        "binK,bnKh->binh", q.astype(jnp.float32), C)
+    den = den + winter * jnp.einsum("binK,bnK->bin", q.astype(jnp.float32), n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+
+    # carry update
+    bt = b[:, -1]  # (B,nh) total log decay of chunk
+    lj = bt[:, None, :] - b + li  # (B,T,nh): log decay from j to chunk end
+    m_new = jnp.maximum(m + bt, jnp.max(lj, axis=1))
+    wj = jnp.exp(lj - m_new[:, None, :])  # (B,T,nh)
+    C_new = (jnp.exp(m + bt - m_new)[:, :, None, None] * C
+             + jnp.einsum("bjn,bjnK,bjnh->bnKh", wj, k.astype(jnp.float32),
+                          v.astype(jnp.float32)))
+    n_new = (jnp.exp(m + bt - m_new)[:, :, None] * n
+             + jnp.einsum("bjn,bjnK->bnK", wj, k.astype(jnp.float32)))
+    return h, (C_new, n_new, m_new)
+
+
+def mlstm_block(x: jax.Array, p: Params, cfg,
+                state: Optional[Params] = None,
+                valid: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    bsz, s, d = x.shape
+    inner = int(cfg.proj_factor * d)
+    nh = cfg.n_heads
+    ih = inner // nh
+    dk = ih // 2
+
+    z = hint(jnp.einsum("bsd,di->bsi", x, p["up_z"]).reshape(
+        bsz, s, nh, ih), "bsni")
+    g = jax.nn.silu(hint(jnp.einsum("bsd,di->bsi", x, p["up_g"]), "btf"))
+    q = hint(jnp.einsum("bsnh,nhk->bsnk", z, p["wq"]) / math.sqrt(dk), "state")
+    k = hint(jnp.einsum("bsnh,nhk->bsnk", z, p["wk"]) / math.sqrt(dk), "state")
+    v = hint(jnp.einsum("bsnh,nhj->bsnj", z, p["wv"]), "bsni")
+    gates = hint(jnp.einsum("bsd,dg->bsg", x, p["w_if"]).astype(jnp.float32),
+                 "state")
+    li = gates[..., :nh]  # log input gate (i = exp(li))
+    lf = jax.nn.log_sigmoid(gates[..., nh:])  # log forget gate
+    if valid is not None:  # pads: f=1, i=0 -> state untouched
+        li = jnp.where(valid[..., None], li, -1e30)
+        lf = jnp.where(valid[..., None], lf, 0.0)
+
+    carry0 = ((state["C"], state["n"], state["m"]) if state is not None else (
+        jnp.zeros((bsz, nh, dk, ih), jnp.float32),
+        jnp.zeros((bsz, nh, dk), jnp.float32),
+        jnp.full((bsz, nh), -1e30, jnp.float32),
+    ))
+    if s > 1:
+        carry = carry0
+        chunk = min(MLSTM_CHUNK, s)
+        pad = (-s) % chunk
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+            lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+        nc = q.shape[1] // chunk
+
+        def to_chunks(a):
+            return a.reshape(bsz, nc, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+        def body(c, xs):
+            qc, kc, vc, lic, lfc = xs
+            h, c = _mlstm_chunk(qc, kc, vc, lic, lfc, c)
+            c = tuple(hint(t, "state" if t.ndim < 4 else "bsni") for t in c)
+            return c, h
+
+        # checkpoint each chunk: bwd recomputes intra-chunk decay matrices
+        # instead of saving (B,T,T,nh) residuals per chunk (§Perf)
+        c_new, hs = jax.lax.scan(
+            jax.checkpoint(body), carry,
+            (to_chunks(q), to_chunks(k), to_chunks(v),
+             to_chunks(li), to_chunks(lf)))
+        h = hs.swapaxes(0, 1).reshape(bsz, nc * chunk, nh, ih)[:, :s]
+    else:
+        h, c_new = _mlstm_chunk(q, k, v, li, lf, carry0)
+    new_state = (None if state is None else
+                 {"C": c_new[0], "n": c_new[1], "m": c_new[2]})
+
+    y = (g * h.reshape(bsz, s, inner).astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bsi,id->bsd", y, p["down"]), new_state
+
+
+def init_mlstm_state(cfg, batch: int):
+    inner = int(cfg.proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    ih = inner // nh
+    dk = ih // 2
+    return {
+        "C": jnp.zeros((batch, nh, dk, ih), jnp.float32),
+        "n": jnp.zeros((batch, nh, dk), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar-memory cell): inherently sequential
+# ===========================================================================
+
+
+def slstm_init(key, cfg) -> Params:
+    d, nh = cfg.d_model, cfg.n_heads
+    dh = d // nh
+    ks = jax.random.split(key, 4)
+    glu_d = int(4 * d / 3)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d),  # i,f,z,o
+        "r": (jax.random.normal(ks[1], (4, nh, dh, dh)) / math.sqrt(dh)
+              ).astype(jnp.float32),
+        "glu_wi": dense_init(ks[2], d, 2 * glu_d),
+        "glu_wo": dense_init(ks[3], glu_d, d),
+    }
+
+
+def _slstm_step(p, cfg, carry, x_t):
+    """x_t: (B, 4d) pre-computed input contribution."""
+    h, c, n, m = carry  # h,c,n: (B,nh,dh); m: (B,nh,dh)
+    bsz = x_t.shape[0]
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    rec = jnp.einsum("bnh,gnhk->bgnk", h, p["r"])  # (B,4,nh,dh)
+    raw = x_t.reshape(bsz, 4, nh, dh).astype(jnp.float32) + rec
+    il, fl, zl, ol = raw[:, 0], raw[:, 1], raw[:, 2], raw[:, 3]
+    lf = jax.nn.log_sigmoid(fl)
+    m_new = jnp.maximum(lf + m, il)
+    i = jnp.exp(il - m_new)
+    f = jnp.exp(lf + m - m_new)
+    c_new = f * c + i * jnp.tanh(zl)
+    n_new = f * n + i
+    h_new = jax.nn.sigmoid(ol) * c_new / jnp.maximum(n_new, 1e-6)
+    return (h_new, c_new, n_new, m_new)
+
+
+def slstm_block(x: jax.Array, p: Params, cfg,
+                state: Optional[Params] = None,
+                valid: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    bsz, s, d = x.shape
+    nh = cfg.n_heads
+    dh = d // nh
+    # sLSTM cell does not tensor-parallelize: pin everything batch-sharded
+    xin = hint(jnp.einsum("bsd,dg->bsg", x, p["w_in"]), "state")
+
+    if state is None:
+        carry = (jnp.zeros((bsz, nh, dh), jnp.float32),) * 3 + (
+            jnp.full((bsz, nh, dh), -1e30, jnp.float32),)
+    else:
+        carry = (state["h"], state["c"], state["n"], state["m"])
+
+    if valid is None:
+        valid_t = jnp.ones((s, bsz), bool)
+    else:
+        valid_t = valid.swapaxes(0, 1)
+
+    def body(c, xs):
+        x_t, v_t = xs
+        nc = _slstm_step(p, cfg, c, x_t)
+        nc = jax.tree.map(
+            lambda new, old: jnp.where(v_t[:, None, None], new, old), nc, c)
+        nc = tuple(hint(t, "state") for t in nc)
+        return nc, nc[0]
+
+    # checkpoint per step: sLSTM is sequential anyway; saving only the
+    # (B,nh,dh) carries keeps 4k-step scans within HBM (§Perf)
+    carry, hs = jax.lax.scan(jax.checkpoint(body), carry,
+                             (xin.swapaxes(0, 1), valid_t))
+    y = hs.swapaxes(0, 1).reshape(bsz, s, d).astype(x.dtype)
+    new_state = (None if state is None else
+                 {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]})
+
+    # post-up GLU FFN (xLSTM sLSTM block)
+    u = hint(jnp.einsum("bsd,dg->bsg", y, p["glu_wi"]), "btf")
+    a, b = jnp.split(u, 2, axis=-1)
+    y = jnp.einsum("bsg,gd->bsd", jax.nn.gelu(a) * b, p["glu_wo"])
+    return y, new_state
+
+
+def init_slstm_state(cfg, batch: int):
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, nh, dh), -1e30,
+                                                  jnp.float32)}

@@ -1,0 +1,145 @@
+"""Activation sharding hints (with_sharding_constraint injection points).
+
+XLA's sharding propagation from weight shardings is usually right, but a
+few activation boundaries (attention heads, MoE dispatch buffers, logits)
+benefit from explicit constraints — without them the partitioner can pick
+replicated intermediates that blow per-device temp memory at 32k sequence
+lengths.  The launcher (or tests) enable hints for a mesh; model code calls
+`hint(x, kind, dims)` which becomes a no-op when hints are disabled, so the
+model stays mesh-agnostic.
+
+Constraints are divisibility-aware: an axis is only assigned if it divides
+the dim (uneven sharding would silently pad compute, e.g. smollm's 9 heads
+on a 16-way model axis — §Perf discusses the fallback).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+
+def _cfg() -> Optional[Dict]:
+    return getattr(_state, "cfg", None)
+
+
+@contextmanager
+def hints(mesh, dp_axes: Tuple[str, ...] = ("data",), tp_axis: str = "model",
+          int8_gather: bool = False):
+    """Enable activation constraints for code run inside this context.
+
+    int8_gather=True turns FSDP weight all-gathers at `fsdp_int8_gather`
+    call sites into int8 transfers (§Perf B2)."""
+    prev = _cfg()
+    _state.cfg = {
+        "mesh": mesh,
+        "dp": dp_axes if len(dp_axes) > 1 else dp_axes[0],
+        "dp_n": _prod(mesh.shape[a] for a in dp_axes),
+        "tp": tp_axis,
+        "tp_n": mesh.shape[tp_axis],
+        "int8_gather": int8_gather,
+    }
+    try:
+        yield
+    finally:
+        _state.cfg = prev
+
+
+def _prod(it):
+    n = 1
+    for x in it:
+        n *= x
+    return n
+
+
+def hint(x: jax.Array, kind: str) -> jax.Array:
+    """kind: 'btd' (batch-only, any rank) | 'bshd' (B,S,heads,hd) |
+    'btf'/'btv' (B,S,model-dim-last) | 'bsni' (B,S,nh,inner: last over tp) |
+    'moe' (B,experts,cap,d) | 'state' (batch-only, any rank) |
+    'last' (batch + last dim over tp, any rank)."""
+    c = _cfg()
+    if c is None:
+        return x
+    dp, tp = c["dp"], c["tp"]
+
+    def fit(dim_size, axis, n):
+        return axis if dim_size % n == 0 and dim_size >= n else None
+
+    b = fit(x.shape[0], dp, c["dp_n"])
+    nd = x.ndim
+    if kind in ("btd", "state"):
+        spec = P(*((b,) + (None,) * (nd - 1)))
+    elif kind == "bshd":
+        h_ax = fit(x.shape[2], tp, c["tp_n"])
+        spec = P(b, None, h_ax, None)
+    elif kind == "bskv":
+        # KV projections: prefer head TP; else shard head_dim so the tensor
+        # lands in the KV cache's layout without a reshard (§Perf A5)
+        h_ax = fit(x.shape[2], tp, c["tp_n"])
+        d_ax = None if h_ax else fit(x.shape[3], tp, c["tp_n"])
+        spec = P(b, None, h_ax, d_ax)
+    elif kind in ("btf", "btv"):
+        spec = P(b, None, fit(x.shape[2], tp, c["tp_n"]))
+    elif kind in ("bsni", "last"):
+        spec = P(*((b,) + (None,) * (nd - 2)
+                   + (fit(x.shape[-1], tp, c["tp_n"]),)))
+    elif kind == "moe":
+        spec = P(b, fit(x.shape[1], tp, c["tp_n"]), None, None)
+    else:
+        return x
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(c["mesh"], spec))
+
+
+@jax.custom_vjp
+def _ste(w, dq):
+    return dq
+
+
+def _ste_fwd(w, dq):
+    return dq, None
+
+
+def _ste_bwd(_, g):
+    # gradient flows straight through to the (sharded) master weight; SPMD
+    # turns the resharding into the usual grad reduce-scatter
+    return g, None
+
+
+_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fsdp_int8_gather(w: jax.Array, tp_dim: int = 0) -> jax.Array:
+    """FSDP weight gather at int8 width (§Perf B2, beyond-paper).
+
+    The sharded bf16 master weight is block-quantized locally (per-row
+    scales over the last dim), the INT8 values are what cross the network
+    (sharding constraint releases only the dp axes), and dequantization is
+    local.  Backward is straight-through: the cotangent goes to the bf16
+    master, so the optimizer still sees full-precision gradients — this is
+    I-BERT's integer-transport thesis applied to the FSDP fabric, cutting
+    gather bytes 2x vs bf16.  No-op unless hints(int8_gather=True).
+    """
+    c = _cfg()
+    if isinstance(w, dict) or c is None or not c.get("int8_gather"):
+        return w  # already-quantized serving leaves pass through
+    from jax.sharding import NamedSharding
+    s = jnp.maximum(jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-1,
+                            keepdims=True), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -127, 127
+                 ).astype(jnp.int8)
+    parts = [None] * w.ndim
+    if w.shape[tp_dim] % c["tp_n"] == 0:
+        parts[tp_dim] = c["tp"]
+    sharding = NamedSharding(c["mesh"], P(*parts))
+    q = jax.lax.with_sharding_constraint(q, sharding)  # int8 crosses links
+    s = jax.lax.with_sharding_constraint(
+        s, NamedSharding(c["mesh"], P(*(parts[:-1] + [None]))))
+    dq = (q.astype(jnp.bfloat16) * s.astype(jnp.bfloat16))
+    return _ste(w, dq)

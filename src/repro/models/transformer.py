@@ -1,0 +1,299 @@
+"""Generic decoder backbone covering all 10 assigned architectures.
+
+Layers are grouped into *periods* (the repeating block pattern: 1 for dense,
+2 for interleaved MoE, 3 for Griffin's rglru/rglru/attn, 8 for xLSTM's 7:1)
+and scanned with stacked parameters, so HLO size is O(period), not O(L) —
+essential to keep 512-device SPMD compiles tractable (DESIGN.md §3).  The
+remainder layers (e.g. recurrentgemma's 26 = 8*3 + 2) are unrolled as a tail.
+
+The same block code serves train (no state), prefill (state in/out), and
+decode (single-token state update), switched by the cache pytree.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import recurrent as rec_mod
+from repro.models.layers import (
+    COMPUTE_DTYPE, cross_entropy_chunked, embed, embed_init, lm_head,
+    mlp, mlp_init, norm, norm_init,
+)
+from repro.models.moe import moe_ffn, moe_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# layer plan
+# ---------------------------------------------------------------------------
+
+
+def period_length(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid" and cfg.block_pattern:
+        return len(cfg.block_pattern)
+    if cfg.family == "ssm" and cfg.slstm_every:
+        return cfg.slstm_every
+    if cfg.n_experts and cfg.moe_every > 1:
+        return cfg.moe_every
+    return 1
+
+
+def layer_plan(cfg: ModelConfig) -> Tuple[int, int, List[str]]:
+    """(n_repeat, tail_len, kinds-of-one-period)."""
+    p = period_length(cfg)
+    kinds = [cfg.block_kind(i) for i in range(p)]
+    return cfg.n_layers // p, cfg.n_layers % p, kinds
+
+
+# ---------------------------------------------------------------------------
+# one block
+# ---------------------------------------------------------------------------
+
+
+def block_init(key, cfg: ModelConfig, pos_in_period: int) -> Params:
+    kind = cfg.block_kind(pos_in_period)
+    ks = jax.random.split(key, 3)
+    p: Params = {"norm1": norm_init(cfg)}
+    if kind == "attn":
+        p["mix"] = attn_mod.attn_init(ks[0], cfg)
+    elif kind == "rglru":
+        p["mix"] = rec_mod.rglru_init(ks[0], cfg)
+    elif kind == "mlstm":
+        p["mix"] = rec_mod.mlstm_init(ks[0], cfg)
+    elif kind == "slstm":
+        p["mix"] = rec_mod.slstm_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cfg.family != "ssm":
+        p["norm2"] = norm_init(cfg)
+        if cfg.is_moe_layer(pos_in_period):
+            p["ffn"] = moe_init(ks[1], cfg)
+        else:
+            p["ffn"] = mlp_init(ks[1], cfg)
+    return p
+
+
+def block_apply(cfg: ModelConfig, pos_in_period: int, p: Params, h: jax.Array,
+                positions: jax.Array, segment_ids, state):
+    """Returns (h, new_state, aux_loss)."""
+    kind = cfg.block_kind(pos_in_period)
+    z = norm(h, p["norm1"], cfg)
+    if kind == "attn":
+        y, new_state = attn_mod.attention(z, p["mix"], cfg, positions,
+                                          segment_ids, cache=state)
+    else:
+        # pads (pos sentinel 2^30 or segment -1) must not touch the state
+        valid = positions < 2**29
+        if segment_ids is not None:
+            valid &= segment_ids >= 0
+        if kind == "rglru":
+            y, new_state = rec_mod.rglru_block(z, p["mix"], cfg, state, valid)
+        elif kind == "mlstm":
+            y, new_state = rec_mod.mlstm_block(z, p["mix"], cfg, state, valid)
+        else:  # slstm
+            y, new_state = rec_mod.slstm_block(z, p["mix"], cfg, state, valid)
+    h = h + y
+    aux = jnp.float32(0.0)
+    if "ffn" in p:
+        z = norm(h, p["norm2"], cfg)
+        if cfg.is_moe_layer(pos_in_period):
+            y, aux = moe_ffn(z, p["ffn"], cfg)
+        else:
+            y = mlp(z, p["ffn"], cfg)
+        h = h + y
+    return h, new_state, aux
+
+
+def block_init_state(cfg: ModelConfig, pos_in_period: int, batch: int,
+                     seq_len: int):
+    kind = cfg.block_kind(pos_in_period)
+    if kind == "attn":
+        return attn_mod.init_attn_cache(cfg, batch, seq_len)
+    if kind == "rglru":
+        return rec_mod.init_rglru_state(cfg, batch)
+    if kind == "mlstm":
+        return rec_mod.init_mlstm_state(cfg, batch)
+    return rec_mod.init_slstm_state(cfg, batch)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    n_rep, tail, kinds = layer_plan(cfg)
+    keys = jax.random.split(key, n_rep + tail + 2)
+
+    def one_period(k):
+        ks = jax.random.split(k, len(kinds))
+        return {f"b{i}": block_init(ks[i], cfg, i) for i in range(len(kinds))}
+
+    periods = [one_period(keys[i]) for i in range(n_rep)]
+    scan_params = jax.tree.map(lambda *xs: jnp.stack(xs), *periods) if n_rep \
+        else {}
+    tail_params = {
+        str(t): block_init(keys[n_rep + t], cfg, t) for t in range(tail)
+    }
+    return {
+        "embed": embed_init(keys[-2], cfg),
+        "scan": scan_params,
+        "tail": tail_params,
+        "final_norm": norm_init(cfg),
+    }
+
+
+class Model:
+    """Thin functional wrapper binding a ModelConfig to apply functions."""
+
+    def __init__(self, cfg: ModelConfig, remat: bool = True):
+        self.cfg = cfg
+        self.remat = remat
+
+    # -- core --------------------------------------------------------------
+
+    def backbone(self, params: Params, h: jax.Array, positions: jax.Array,
+                 segment_ids=None, caches=None):
+        """h: (B,S,D) embeddings -> (h_final, new_caches, aux)."""
+        cfg = self.cfg
+        n_rep, tail, kinds = layer_plan(cfg)
+        np_ = len(kinds)
+
+        def period_fn(h, period_params, period_caches):
+            new_caches = {}
+            aux = jnp.float32(0.0)
+            for i in range(np_):
+                st = None if period_caches is None else period_caches[f"b{i}"]
+                h, ns, a = block_apply(cfg, i, period_params[f"b{i}"], h,
+                                       positions, segment_ids, st)
+                if period_caches is not None:
+                    new_caches[f"b{i}"] = ns
+                aux = aux + a
+            return h, new_caches, aux
+
+        pf = period_fn
+        if self.remat and caches is None:
+            pf = jax.checkpoint(
+                period_fn,
+                policy=jax.checkpoint_policies.nothing_saveable,
+            )
+
+        if n_rep:
+            def scan_body(carry, xs):
+                h, aux_acc = carry
+                pp = xs[0] if caches is not None else xs
+                pc = xs[1] if caches is not None else None
+                h, ncache, aux = pf(h, pp, pc)
+                return (h, aux_acc + aux), (ncache if caches is not None
+                                            else None)
+
+            xs = (params["scan"], caches["scan"]) if caches is not None \
+                else params["scan"]
+            (h, aux), new_scan_caches = jax.lax.scan(
+                scan_body, (h, jnp.float32(0.0)), xs)
+        else:
+            aux = jnp.float32(0.0)
+            new_scan_caches = None
+
+        new_tail = {}
+        for t in range(tail):
+            st = None if caches is None else caches["tail"][str(t)]
+            h, ns, a = block_apply(cfg, t, params["tail"][str(t)], h,
+                                   positions, segment_ids, st)
+            if caches is not None:
+                new_tail[str(t)] = ns
+            aux = aux + a
+
+        h = norm(h, params["final_norm"], cfg)
+        new_caches = (None if caches is None else
+                      {"scan": new_scan_caches, "tail": new_tail})
+        return h, new_caches, aux
+
+    def embed_inputs(self, params, tokens=None, embeds=None):
+        if embeds is not None:
+            return embeds.astype(COMPUTE_DTYPE)
+        return embed(tokens, params["embed"])
+
+    # -- entry points --------------------------------------------------------
+
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """batch: tokens|embeds, labels, positions?, segment_ids?"""
+        tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        x = self.embed_inputs(params, tokens, embeds)
+        b, s = x.shape[:2]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h, _, aux = self.backbone(params, x, positions,
+                                  batch.get("segment_ids"))
+        ce = cross_entropy_chunked(h, batch["labels"], params["embed"])
+        return ce + 0.01 * aux
+
+    def forward_logits(self, params, tokens=None, embeds=None, positions=None):
+        x = self.embed_inputs(params, tokens, embeds)
+        b, s = x.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h, _, _ = self.backbone(params, x, positions)
+        return lm_head(h, params["embed"])
+
+    def init_cache(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        n_rep, tail, kinds = layer_plan(cfg)
+
+        def one_period():
+            return {f"b{i}": block_init_state(cfg, i, batch, seq_len)
+                    for i in range(len(kinds))}
+
+        scan_caches = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape), one_period()
+        ) if n_rep else {}
+        tail_caches = {str(t): block_init_state(cfg, t, batch, seq_len)
+                       for t in range(tail)}
+        return {"scan": scan_caches, "tail": tail_caches,
+                "pos": jnp.zeros((batch,), jnp.int32)}
+
+    def prefill(self, params, caches, tokens=None, embeds=None,
+                positions=None, last_idx=None):
+        """Fill caches from a (left-aligned) prompt.
+
+        last_idx: (B,) index of each request's final prompt token (for
+        padded batches of unequal lengths); defaults to S-1.
+        Returns (logits at last_idx, caches).
+        """
+        x = self.embed_inputs(params, tokens, embeds)
+        b, s = x.shape[:2]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if last_idx is None:
+            last_idx = jnp.full((b,), s - 1, jnp.int32)
+        sub = {"scan": caches["scan"], "tail": caches["tail"]}
+        h, sub, _ = self.backbone(params, x, positions, caches=sub)
+        bidx = jnp.arange(b)
+        last_pos = positions[bidx, last_idx].astype(jnp.int32)
+        caches = dict(sub, pos=last_pos + 1)
+        h_last = h[bidx, last_idx][:, None]
+        return lm_head(h_last, params["embed"])[:, 0], caches
+
+    def decode_step(self, params, caches, token: jax.Array):
+        """token: (B,) int32 (or (B,D) embeds for stub frontends)."""
+        if token.ndim == 1:
+            x = self.embed_inputs(params, tokens=token[:, None])
+        else:
+            x = token[:, None, :].astype(COMPUTE_DTYPE)
+        positions = caches["pos"][:, None]
+        sub = {"scan": caches["scan"], "tail": caches["tail"]}
+        h, sub, _ = self.backbone(params, x, positions, caches=sub)
+        caches = dict(sub, pos=caches["pos"] + 1)
+        return lm_head(h[:, -1:], params["embed"])[:, 0], caches
+
+
+def make_model(cfg: ModelConfig, remat: bool = True) -> Model:
+    return Model(cfg, remat=remat)

@@ -1,0 +1,4 @@
+from repro.optim.optimizer import (  # noqa: F401
+    adamw, adamw8, cosine_schedule, global_norm, make_optimizer, sgdm,
+)
+from repro.optim.compression import block_quantize, block_dequantize, compressed_psum  # noqa: F401

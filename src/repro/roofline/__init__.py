@@ -1,0 +1,2 @@
+from repro.roofline.analysis import RooflineTerms, analyze  # noqa: F401
+from repro.roofline.hlo import collective_bytes  # noqa: F401

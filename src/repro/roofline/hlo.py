@@ -1,0 +1,130 @@
+"""HLO-text parsing: collective bytes per device (loop-weighted).
+
+cost_analysis() has no collective-byte entry, so (per the brief) we parse
+the compiled module text and sum the bytes moved by every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+The compiled module is the per-device program, so shapes are already
+per-shard; per op we take max(result, operands) bytes as that device's
+link traffic.  Collectives inside scan-derived while loops execute
+trip-count times: XLA prints `backend_config={"known_trip_count":{"n":N}}`
+on the while op, and we propagate multipliers through nested loops
+(ENTRY=1, body-of-while = caller_mult * N).
+
+CPU-backend correction: the host backend promotes bf16 dot outputs to f32
+and all-reduces BEFORE converting back (reduction computation named
+`*_promoted`); on TPU the same all-reduce moves bf16.  Promoted reductions
+are therefore counted at half width.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_CALL_RE = re.compile(r"= *[^ ]* (" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_WHILE_RE = re.compile(r"while\(.*?body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r"known_trip_count\D*(\d+)")
+# header args may contain nested parens (tuple-typed params): greedy .*
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_EDGE_RE = re.compile(r"(?:calls|to_apply|condition|body)=%?([\w\.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):
+            m = _HDR_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.lstrip().startswith("ENTRY"):
+                    comps["__entry__"] = comps[cur]
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _loop_multipliers(comps: Dict[str, List[str]]) -> Dict[str, float]:
+    """mult[comp] = product of trip counts of enclosing while loops,
+    propagated through ALL call edges (while bodies weighted by trip count;
+    fusions/calls/reduce to_apply weighted 1)."""
+    edges: List[Tuple[str, str, float]] = []
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            trip = None
+            if wm:
+                t = _TRIP_RE.search(line)
+                trip = float(t.group(1)) if t else 1.0
+                edges.append((name, wm.group(1), trip))
+            for em in _EDGE_RE.finditer(line):
+                if wm and em.group(1) == wm.group(1):
+                    continue  # already added with its trip count
+                if em.group(1) != name:
+                    edges.append((name, em.group(1), 1.0))
+    mult: Dict[str, float] = {n: 1.0 for n in comps}
+    # fixpoint: take MAX over callers (a comp reached from both a loop and
+    # entry keeps the loop weighting)
+    for _ in range(12):
+        changed = False
+        for caller, body, n in edges:
+            new = mult.get(caller, 1.0) * n
+            if new > mult.get(body, 1.0):
+                mult[body] = new
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved by each collective kind (loop-weighted)."""
+    comps = _computations(hlo_text)
+    mult = _loop_multipliers(comps)
+    out: Dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0.0
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 1.0)
+        for line in lines:
+            cm = _CALL_RE.search(line)
+            if cm is None:
+                continue
+            lhs, _, rhs = line.partition("=")
+            res_b = _shape_bytes(rhs.partition("(")[0])
+            opnd_b = _shape_bytes(rhs.partition("(")[2].partition(")")[0])
+            b = max(res_b, opnd_b)
+            if "_promoted" in line:
+                b //= 2  # CPU bf16->f32 promotion artifact (see docstring)
+            out[cm.group(1)] += b * m
+            out["count"] += m
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out

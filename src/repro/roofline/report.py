@@ -1,0 +1,150 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the JSON
+records written by repro.launch.dryrun.
+
+  PYTHONPATH=src python -m repro.roofline.report --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dir_: str) -> List[Dict]:
+    recs = []
+    for fp in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(fp) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+CELL_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+              "long_500k": 3}
+
+
+def dryrun_table(recs: List[Dict], mesh: str) -> str:
+    rows = ["| arch | cell | status | compile | temp/chip | args/chip | "
+            "collective bytes/chip | coll ops |",
+            "|---|---|---|---|---|---|---|---|"]
+    sel = [r for r in recs if r.get("mesh", "").startswith(
+        "multipod" if mesh == "multi" else "pod")]
+    sel.sort(key=lambda r: (r["arch"], CELL_ORDER.get(r["cell"], 9)))
+    for r in sel:
+        if r["status"] == "SKIP":
+            rows.append(f"| {r['arch']} | {r['cell']} | SKIP | - | - | - |"
+                        f" - | - |")
+            continue
+        if r["status"] != "OK":
+            rows.append(f"| {r['arch']} | {r['cell']} | **FAIL** | - | - |"
+                        f" - | - | - |")
+            continue
+        m = r["memory_analysis"]
+        c = r["collectives"]
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | OK | {r['compile_s']:.0f}s "
+            f"| {fmt_bytes(m.get('temp_size_in_bytes'))} "
+            f"| {fmt_bytes(m.get('argument_size_in_bytes'))} "
+            f"| {fmt_bytes(c.get('total'))} | {int(c.get('count', 0))} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs: List[Dict]) -> str:
+    rows = ["| arch | cell | compute | memory | collective | dominant | "
+            "MODEL_FLOPS | useful/compiled | roofline frac | "
+            "what moves the dominant term |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    sel = [r for r in recs if r.get("mesh", "").startswith("pod")
+           and r["status"] == "OK"]
+    sel.sort(key=lambda r: (r["arch"], CELL_ORDER.get(r["cell"], 9)))
+    for r in sel:
+        t = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['cell']} | {fmt_s(t['compute_s'])} "
+            f"| {fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} "
+            f"| **{t['dominant']}** | {t['model_flops_total']:.2e} "
+            f"| {t['model_flops_ratio']:.3f} | {t['roofline_fraction']:.3f} "
+            f"| {r.get('suggestion', '')} |")
+    return "\n".join(rows)
+
+
+def skip_table(recs: List[Dict]) -> str:
+    rows = ["| arch | cell | reason |", "|---|---|---|"]
+    seen = set()
+    for r in recs:
+        if r["status"] == "SKIP" and (r["arch"], r["cell"]) not in seen:
+            seen.add((r["arch"], r["cell"]))
+            rows.append(f"| {r['arch']} | {r['cell']} | "
+                        f"{r.get('skip_reason','')[:120]} |")
+    return "\n".join(rows)
+
+
+def summarize(recs: List[Dict]) -> Dict:
+    ok = [r for r in recs if r["status"] == "OK"]
+    fail = [r for r in recs if r["status"] == "FAIL"]
+    skip = [r for r in recs if r["status"] == "SKIP"]
+    worst = sorted((r for r in ok if r["mesh"].startswith("pod")),
+                   key=lambda r: r["roofline"]["roofline_fraction"])
+    most_coll = sorted(
+        (r for r in ok if r["mesh"].startswith("pod")),
+        key=lambda r: -(r["roofline"]["collective_s"]
+                        / max(sum((r["roofline"]["compute_s"],
+                                   r["roofline"]["memory_s"],
+                                   r["roofline"]["collective_s"])), 1e-30)))
+    return {"n_ok": len(ok), "n_fail": len(fail), "n_skip": len(skip),
+            "worst_fraction": [(r["arch"], r["cell"],
+                                r["roofline"]["roofline_fraction"])
+                               for r in worst[:5]],
+            "most_collective_bound": [(r["arch"], r["cell"])
+                                      for r in most_coll[:5]]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    parts = [
+        "### Dry-run table — single pod (16x16 = 256 chips)\n",
+        dryrun_table(recs, "single"),
+        "\n### Dry-run table — multi-pod (2x16x16 = 512 chips)\n",
+        dryrun_table(recs, "multi"),
+        "\n### Skipped cells\n",
+        skip_table(recs),
+        "\n### Roofline (single-pod, per brief)\n",
+        roofline_table(recs),
+        "\n### Summary\n",
+        "```json\n" + json.dumps(summarize(recs), indent=1) + "\n```",
+    ]
+    text = "\n".join(parts)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    FailureInjector, SimulatedFailure, run_with_recovery,
+)
+from repro.runtime.stragglers import StragglerMonitor  # noqa: F401
+from repro.runtime.elastic import elastic_mesh_shape  # noqa: F401

@@ -1,0 +1,157 @@
+"""Batched serving engine: wave-scheduled prefill + decode.
+
+The paper's system is an inference pipeline fed by an input FPGA at line
+rate (§8.2), with the no-padding optimization cutting latency on short GLUE
+sequences.  Our engine serves batched requests the same way:
+
+  * requests are bucketed to the smallest compiled prompt length
+    (core/packing.bucket_len — the minimum-padding rule)
+  * a wave = up to `max_batch` requests: one batched prefill, then decode
+    steps until every request hit its token budget or EOS
+  * a deadline (stragglers.py) launches partial waves instead of waiting
+  * jit programs are cached per (bucket, batch) so steady-state serving
+    never recompiles
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import bucket_len
+from repro.models.transformer import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never
+    tokens_out: List[int] = field(default_factory=list)
+    done: bool = False
+    t_enqueue: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+
+class ServingEngine:
+    def __init__(self, model: Model, params, max_batch: int = 8,
+                 buckets=(32, 64, 128, 256), greedy: bool = True,
+                 deadline_s: float = 0.05):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.buckets = buckets
+        self.greedy = greedy
+        self.deadline_s = deadline_s
+        self._queue: List[Request] = []
+        self._jit_prefill: Dict[tuple, Callable] = {}
+        self._jit_decode: Optional[Callable] = None
+        self.stats = {"waves": 0, "prefill_tokens": 0, "decode_steps": 0}
+
+    # -- public ----------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        req.t_enqueue = time.perf_counter()
+        self._queue.append(req)
+
+    def run(self) -> List[Request]:
+        """Serve until the queue drains; returns completed requests."""
+        done: List[Request] = []
+        while self._queue:
+            wave = self._take_wave()
+            done += self._serve_wave(wave)
+        return done
+
+    # -- internals ---------------------------------------------------------------
+
+    def _take_wave(self) -> List[Request]:
+        t0 = time.perf_counter()
+        while (len(self._queue) < self.max_batch
+               and time.perf_counter() - t0 < self.deadline_s):
+            break  # single-threaded here: the deadline matters with async submit
+        wave = self._queue[: self.max_batch]
+        self._queue = self._queue[self.max_batch:]
+        return wave
+
+    def _prefill_fn(self, bucket: int, batch: int):
+        key = (bucket, batch)
+        if key not in self._jit_prefill:
+            def fn(params, tokens, positions, lengths):
+                caches = self.model.init_cache(batch, bucket + 64)
+                logits, caches = self.model.prefill(
+                    params, caches, tokens=tokens, positions=positions,
+                    last_idx=lengths - 1)
+                return logits, caches
+
+            self._jit_prefill[key] = jax.jit(fn)
+        return self._jit_prefill[key]
+
+    def _decode_fn(self):
+        if self._jit_decode is None:
+            def fn(params, caches, token):
+                return self.model.decode_step(params, caches, token)
+
+            self._jit_decode = jax.jit(fn)
+        return self._jit_decode
+
+    def _serve_wave(self, wave: List[Request]) -> List[Request]:
+        self.stats["waves"] += 1
+        b = len(wave)
+        maxlen = max(len(r.prompt) for r in wave)
+        bucket = bucket_len(maxlen, self.buckets, lane=8)
+        toks = np.zeros((b, bucket), np.int32)
+        # left-aligned prompts; pad positions = 2^30 so the causal mask can
+        # never attend to them (and cache slot i == position i for decode)
+        pos = np.full((b, bucket), 2**30, np.int32)
+        for i, r in enumerate(wave):
+            n = len(r.prompt)
+            toks[i, :n] = r.prompt
+            pos[i, :n] = np.arange(n)
+        lengths = np.array([len(r.prompt) for r in wave], np.int32)
+        self.stats["prefill_tokens"] += int(lengths.sum())
+
+        logits, caches = self._prefill_fn(bucket, b)(
+            self.params, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(lengths))
+        decode = self._decode_fn()
+        now = time.perf_counter()
+        cur = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for i, r in enumerate(wave):
+            t = int(cur[i])
+            r.tokens_out.append(t)
+            r.t_first_token = now
+            if t == r.eos_id or r.max_new_tokens <= 1:
+                r.done = True
+                r.t_done = now
+
+        budget = max(r.max_new_tokens for r in wave)
+        if all(r.done for r in wave):
+            budget = 0
+        for _ in range(budget - 1):
+            logits, caches = decode(self.params, caches, jnp.asarray(cur))
+            self.stats["decode_steps"] += 1
+            cur = np.asarray(jnp.argmax(logits, -1), np.int32)
+            alive = False
+            for i, r in enumerate(wave):
+                if r.done or len(r.tokens_out) >= r.max_new_tokens:
+                    continue
+                t = int(cur[i])
+                r.tokens_out.append(t)
+                if t == r.eos_id or len(r.tokens_out) >= r.max_new_tokens:
+                    r.done = True
+                    r.t_done = time.perf_counter()
+                else:
+                    alive = True
+            if not alive:
+                break
+        for r in wave:
+            r.done = True
+            if not r.t_done:
+                r.t_done = time.perf_counter()
+        return wave

@@ -1,0 +1,7 @@
+# NOTE: deliberately does NOT set --xla_force_host_platform_device_count:
+# smoke tests and benches must see 1 device (dry-run sets its own flags in
+# its own process).  Multi-device tests spawn subprocesses with the flag.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,73 @@
+"""Checkpoint manager: roundtrip, atomicity, integrity, pruning."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {
+            "w": jnp.asarray(rng.normal(0, 1, (8, 16)).astype(np.float32)),
+            "emb": jnp.asarray(rng.integers(-5, 5, (4, 4)), jnp.int8),
+        },
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = _tree()
+    mgr.save(3, tree, blocking=True)
+    step, restored = mgr.restore()
+    assert step == 3
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(1))  # async
+    mgr.save(2, _tree(2))  # waits for 1, then async
+    mgr.wait()
+    assert mgr.all_steps() == [1, 2]
+    _, restored = mgr.restore(1)
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"]),
+        np.asarray(_tree(1)["params"]["w"]))
+
+
+def test_prune_keeps_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s), blocking=True)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_checksum_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(5, _tree(), blocking=True)
+    d = os.path.join(str(tmp_path), "step_00000005")
+    manifest = json.load(open(os.path.join(d, "manifest.json")))
+    victim = next(iter(manifest["leaves"].values()))["file"]
+    with open(os.path.join(d, victim), "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad")
+    with pytest.raises(IOError):
+        mgr.restore(5)
+
+
+def test_tmp_dirs_are_not_valid_checkpoints(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp"))
+    assert mgr.all_steps() == []
+    with pytest.raises(FileNotFoundError):
+        mgr.restore()

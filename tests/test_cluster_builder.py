@@ -1,0 +1,153 @@
+"""Cluster Builder + clusters-of-clusters invariants (paper §4, §6)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.core import cluster as cl
+from repro.core.cluster_builder import build_plan, build_topology
+from repro.models.transformer import init_params, make_model
+
+ARCHS = [a for a in list_archs() if a != "ibert-base"]
+
+
+def _mesh(shape=(16, 16), axes=("data", "model")):
+    return AbstractMesh(shape, axes)
+
+
+# -- topology (paper-faithful bookkeeping) -----------------------------------
+
+
+def test_ibert_encoder_cluster_matches_fig14():
+    """Paper §9.4: 'we have 38 kernels, including six GMI kernels' per
+    encoder cluster (Fig. 14 numbers kernels 0..38 skipping 33): kern_0
+    gateway/broadcast, 1-3 linear+quant, 4-15 dotprod+softmax, 16-27
+    softmax-matmul, then linear/LN/FFN/LN + scatter/gather/broadcast."""
+    cfg = get_config("ibert-base")
+    topo = build_topology(cfg)
+    assert len(topo.clusters) == cfg.n_layers == 12
+    c = topo.clusters[0]
+    assert len(c.kernels) == 38
+    assert c.kernels[0].kind == "gateway"
+    assert [k.op for k in c.kernels[1:4]] == [
+        "linear_q_quant", "linear_k_quant", "linear_v_quant"]
+    assert all(k.op == "dotprod_softmax" for k in c.kernels[4:16])
+    assert all(k.op == "softmax_matmul_quant" for k in c.kernels[16:28])
+    comm = sum(1 for k in c.kernels if k.kind in ("gmi", "gateway"))
+    assert comm == 6  # six GMI/communication kernels (paper §9.4)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_topology_within_galapagos_limits(arch):
+    topo = build_topology(get_config(arch))
+    topo.validate()
+    for c in topo.clusters:
+        assert len(c.kernels) <= cl.MAX_KERNELS_PER_CLUSTER
+        ids = [k.local_id for k in c.kernels]
+        assert ids == sorted(ids) == list(range(len(ids)))
+    assert len(topo.clusters) <= cl.MAX_CLUSTERS
+
+
+def test_gateway_routing_table_arithmetic():
+    """Paper §4: gateways cut per-device routes from ~N^2 to 2N-1."""
+    topo = build_topology(get_config("deepseek-coder-33b"))
+    n_clusters = len(topo.clusters)
+    per_cluster = max(len(c.kernels) for c in topo.clusters)
+    with_gw = topo.routing_entries_per_device()
+    flat = topo.routing_entries_flat()
+    assert with_gw == per_cluster + n_clusters - 1
+    assert flat > with_gw  # the paper's saving
+    assert cl.max_addressable_kernels() == 65536
+
+
+def test_inter_cluster_edges_go_through_gateway():
+    topo = build_topology(get_config("smollm-135m"))
+    for (sc, sl), (dc, dl) in topo.edges:
+        if sc != dc:
+            assert dl == cl.GATEWAY_LOCAL_ID or sl == cl.GATEWAY_LOCAL_ID
+
+
+def test_cluster_kernel_limit_enforced():
+    topo = cl.ClusterTopology()
+    c = topo.new_cluster()
+    for _ in range(cl.MAX_KERNELS_PER_CLUSTER - 1):
+        c.add("compute")
+    with pytest.raises(ValueError):
+        c.add("compute")
+
+
+# -- sharding plan ------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("multi_pod", [False, True])
+def test_param_specs_divisible(arch, multi_pod):
+    """Every assigned spec axis must divide its dim (no silent padding)."""
+    cfg = get_config(arch)
+    mesh = _mesh((2, 16, 16), ("pod", "data", "model")) if multi_pod \
+        else _mesh()
+    params_shape = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    plan = build_plan(cfg, mesh, params_shape, batch=256)
+
+    def check(path, spec, shape):
+        for i, part in enumerate(spec):
+            if part is None:
+                continue
+            axes = (part,) if isinstance(part, str) else part
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert shape[i] % n == 0, (path, shape, spec)
+
+    def walk(specs, shapes, path=()):
+        if isinstance(specs, dict):
+            for k in specs:
+                walk(specs[k], shapes[k], path + (k,))
+        else:
+            check(path, specs, shapes.shape)
+
+    walk(plan.param_specs, params_shape)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-coder-33b", "moonshot-v1-16b-a3b"])
+def test_big_weights_are_sharded(arch):
+    """>=2D weights above 1M elements must not be fully replicated."""
+    cfg = get_config(arch)
+    mesh = _mesh()
+    params_shape = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    plan = build_plan(cfg, mesh, params_shape, batch=256)
+
+    def walk(specs, shapes, path=()):
+        if isinstance(specs, dict):
+            for k in specs:
+                walk(specs[k], shapes[k], path + (k,))
+        else:
+            size = int(np.prod(shapes.shape))
+            if size > 4_000_000 and path[-1] not in ("r", "w_in"):
+                assert any(p is not None for p in specs), (path, shapes.shape)
+
+    walk(plan.param_specs, params_shape)
+
+
+def test_moe_experts_on_model_axis():
+    cfg = get_config("moonshot-v1-16b-a3b")
+    mesh = _mesh()
+    params_shape = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+    plan = build_plan(cfg, mesh, params_shape, batch=256)
+    wi_spec = plan.param_specs["scan"]["b0"]["ffn"]["wi"]
+    assert wi_spec[1] == "model"  # experts dim (post scan-stack offset)
+
+
+def test_batch_spec_falls_back_when_indivisible():
+    cfg = get_config("smollm-135m")
+    mesh = _mesh()
+    plan = build_plan(cfg, mesh, batch=1)
+    assert plan.data_spec(2, 1) == P(None, None)  # B=1 can't shard
+    plan = build_plan(cfg, mesh, batch=256)
+    assert plan.data_spec(2, 256)[0] is not None

@@ -1,0 +1,103 @@
+"""Property tests (hypothesis) for the integer-only I-BERT math.
+
+Bounds mirror I-BERT's published approximation errors: i-exp <= ~3e-3,
+i-GELU <= ~2e-2 absolute, i-softmax rows sum to 1 within quant resolution.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import ibert_ops as iops
+from repro.core.quant import quantize
+
+_settings = dict(max_examples=30, deadline=None)
+
+
+@given(st.lists(st.floats(-30.0, 0.0), min_size=4, max_size=200),
+       st.floats(0.6, 40.0))
+@settings(**_settings)
+def test_i_exp_error_bound(vals, amax):
+    x = np.asarray(vals, np.float32)
+    q = quantize(jnp.asarray(x), scale=jnp.float32(amax / iops.ACT_QMAX),
+                 bits=iops.ACT_BITS)
+    qe, se = iops.i_exp(q.values.astype(jnp.int32), q.scale)
+    approx = np.asarray(qe, np.float64) * float(se)
+    exact = np.exp(np.asarray(q.values, np.float64) * float(q.scale))
+    assert np.all(np.asarray(qe) >= 0)
+    # poly error (~3e-3, I-BERT Fig.2) + one quantization step of slack
+    assert np.abs(approx - exact).max() < 5e-3 + float(q.scale)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(**_settings)
+def test_i_sqrt_close(n):
+    got = int(iops.i_sqrt(jnp.asarray([n], jnp.int32))[0])
+    exact = int(np.sqrt(n))
+    # I-BERT early-stop Newton can land 1 off the exact floor
+    assert abs(got - exact) <= 1
+
+
+@given(st.integers(2, 8), st.integers(4, 96), st.floats(0.6, 20.0),
+       st.integers(0, 10_000))
+@settings(**_settings)
+def test_i_softmax_distribution(rows, cols, spread, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, spread, (rows, cols)).astype(np.float32)
+    q = quantize(jnp.asarray(x), bits=iops.ACT_BITS)
+    qp, sp = iops.i_softmax(q.values.astype(jnp.int32), q.scale)
+    p = np.asarray(qp) * float(sp)
+    assert np.all(p >= 0)
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=2e-2)
+    ref = np.asarray(iops.f_softmax(jnp.asarray(x)))
+    assert np.abs(p - ref).max() < 0.02
+    # ordering preserved within quantization resolution
+    for r in range(rows):
+        top_i, top_ref = np.argmax(p[r]), np.argmax(ref[r])
+        assert p[r, top_i] >= p[r, top_ref] - 2 ** -iops.SOFTMAX_OUT_BITS
+
+
+@given(st.floats(0.6, 30.0), st.integers(0, 10_000))
+@settings(**_settings)
+def test_i_gelu_error_bound(amax, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-amax, amax, 500).astype(np.float32)
+    q = quantize(jnp.asarray(x), bits=iops.ACT_BITS)
+    qq = iops.requantize_to_bits(q.values.astype(jnp.int32), q.scale)
+    g, sg = iops.i_gelu(qq.values, qq.scale)
+    approx = np.asarray(g, np.float64) * float(sg)
+    ref = np.asarray(iops.f_gelu(qq.values.astype(jnp.float32) * qq.scale))
+    # I-BERT reports ~1.8e-2 max abs error for i-GELU
+    assert np.abs(approx - ref).max() < 0.03
+
+
+@given(st.integers(2, 6), st.sampled_from([64, 768, 1024]),
+       st.integers(0, 10_000))
+@settings(**_settings)
+def test_i_layernorm_error(rows, h, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 2, (rows, h)).astype(np.float32)
+    gamma = rng.uniform(0.5, 1.5, h).astype(np.float32)
+    beta = rng.normal(0, 0.2, h).astype(np.float32)
+    q = quantize(jnp.asarray(x), bits=8)
+    prep = iops.layernorm_prepare(jnp.asarray(gamma), jnp.asarray(beta))
+    qy, sy = iops.i_layernorm(q.values.astype(jnp.int32), prep)
+    y = np.asarray(qy) * float(sy)
+    ref = np.asarray(iops.f_layernorm(jnp.asarray(x), gamma, beta))
+    # int8 input quantization dominates the error budget
+    assert np.abs(y - ref).max() < 0.15
+    assert np.abs(y - ref).mean() < 0.04
+
+
+def test_i_gelu_monotone_region():
+    """GELU is monotone for x > ~0.4; the integer poly must preserve it up
+    to floor-rounding (the >>g renormalization can dip by one phi-LSB)."""
+    x = np.linspace(0.5, 8.0, 400).astype(np.float32)
+    q = quantize(jnp.asarray(x), bits=iops.ACT_BITS)
+    g, sg = iops.i_gelu(q.values.astype(jnp.int32), q.scale)
+    deq = np.asarray(g, np.float64) * float(sg)
+    span = deq.max() - deq.min()
+    assert np.all(np.diff(deq) >= -0.005 * span)
+    # and globally increasing: endpoint ordering strictly preserved
+    assert deq[-1] > deq[0]
+    assert np.corrcoef(deq, x)[0, 1] > 0.999

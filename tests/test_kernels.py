@@ -1,0 +1,101 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle.
+
+Integer kernels must be BIT-EXACT against ref.py (the paper validates its
+FPGA encoder bit-for-bit against software I-BERT, §8.2); shapes and dtypes
+are swept per the brief.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ibert_ops as iops
+from repro.core.quant import quantize
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (8, 128, 128), (128, 512, 256), (50, 300, 70), (1, 128, 128),
+    (33, 1024, 65),
+])
+@pytest.mark.parametrize("requant", [False, True])
+def test_int8_matmul_shapes(m, k, n, requant):
+    rng = np.random.default_rng(m * 1000 + k + n)
+    a = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+    sa, sb, so = jnp.float32(0.013), jnp.float32(0.021), jnp.float32(0.4)
+    bias = jnp.asarray(rng.integers(-500, 500, (n,)), jnp.int32)
+    got = ops.int8_matmul(a, b, sa, sb, s_out=so if requant else None,
+                          bias=bias, impl="interpret")
+    want = ref.int8_matmul(a, b, sa, sb, bias=bias,
+                           s_out=so if requant else None)
+    assert got.dtype == (jnp.int8 if requant else jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("rows,cols", [(8, 64), (13, 77), (64, 128), (1, 9)])
+def test_i_softmax_kernel(rows, cols):
+    rng = np.random.default_rng(rows * 100 + cols)
+    x = rng.normal(0, 4, (rows, cols)).astype(np.float32)
+    q = quantize(x, bits=iops.ACT_BITS)
+    qv = q.values.astype(jnp.int32)
+    got = ops.i_softmax(qv, q.scale, impl="interpret")
+    want = ref.i_softmax_rows(qv, q.scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the result is a valid distribution at scale 2^-14
+    p = np.asarray(got) * 2.0 ** -iops.SOFTMAX_OUT_BITS
+    assert np.all(p >= 0)
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=2e-2)
+
+
+@pytest.mark.parametrize("rows,h", [(8, 768), (9, 576), (16, 64), (3, 8192)])
+def test_i_layernorm_kernel(rows, h):
+    rng = np.random.default_rng(rows + h)
+    x = rng.normal(0, 2, (rows, h)).astype(np.float32)
+    q = quantize(x, bits=8)
+    qv = q.values.astype(jnp.int32)
+    prep = iops.layernorm_prepare(
+        jnp.asarray(rng.uniform(0.5, 1.5, h).astype(np.float32)),
+        jnp.asarray(rng.normal(0, 0.1, h).astype(np.float32)))
+    got, s_got = ops.i_layernorm(qv, prep, impl="interpret")
+    want = ref.i_layernorm_rows(qv, prep.q_gamma, prep.q_beta, prep.s_gamma)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(37, 100), (64, 64), (1, 5), (128, 300)])
+def test_i_gelu_kernel(shape):
+    rng = np.random.default_rng(shape[0])
+    x = rng.uniform(-6, 6, shape).astype(np.float32)
+    q = quantize(x, bits=iops.ACT_BITS)
+    qv = q.values.astype(jnp.int32)
+    got = ops.i_gelu(qv, q.scale, impl="interpret")
+    want = ref.i_gelu_elem(qv, q.scale)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_int8_matmul_kernel_direct_tiling():
+    """Direct pallas_call on exactly-tiled shapes (no ops padding)."""
+    from repro.kernels.int8_matmul import int8_matmul as raw
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(-127, 128, (256, 1024)), jnp.int8)
+    b = jnp.asarray(rng.integers(-127, 128, (1024, 256)), jnp.int8)
+    got = raw(a, b, jnp.float32(0.01), jnp.float32(0.02), interpret=True)
+    want = ref.int8_matmul(a, b, jnp.float32(0.01), jnp.float32(0.02))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_flash_attention_ref_matches_dense():
+    """The chunked online-softmax path == dense attention oracle."""
+    from repro.models import attention as am
+    rng = np.random.default_rng(1)
+    b, s, h, hd = 2, 64, 3, 16
+    q = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, h, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    msk = am._mask(s, s, pos, pos, True, 0)
+    dense = am._dense_attention(q, k, v, msk)
+    chunked = am._chunked_attention(q, k, v, pos, pos, True, 0)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=2e-5)

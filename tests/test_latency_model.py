@@ -1,0 +1,53 @@
+"""Paper Eq. 1 latency model + derived quantities (§8)."""
+import numpy as np
+
+from repro.core.latency_model import (
+    StageTiming, estimate_table2, fit_x_fraction, pipeline_bubble_fraction,
+    throughput, total_latency,
+)
+
+
+def test_eq1_reproduces_paper_table2_at_128():
+    """Paper: seq 128 -> X=111708cy, T=209789cy @~200MHz clock-equivalent;
+    with d=1.1us and L=12 the paper reports 7.193 ms.  We verify the
+    formula against the paper's own cycle numbers (5ns/cycle)."""
+    cyc = 5e-9  # the numbers in Table 1/2 are consistent with a 200MHz clock
+    t = StageTiming(T=209789 * cyc, X=111708 * cyc, d=1.1e-6)
+    total = total_latency(t, 12)
+    assert abs(total - 7.193e-3) / 7.193e-3 < 0.02
+
+
+def test_eq1_seq1_matches_paper():
+    cyc = 5e-9
+    t = StageTiming(T=6936 * cyc, X=6936 * cyc, d=1.1e-6)
+    assert abs(total_latency(t, 12) - 0.416e-3) / 0.416e-3 < 0.03
+
+
+def test_throughput_is_slowest_stage_rate():
+    t = StageTiming(T=494e-6, X=260e-6, d=1.1e-6)
+    # paper §8.2.3: ~2023 inferences/s at seq 128 (T = 1/2023 s)
+    assert abs(throughput(StageTiming(T=1 / 2023.47, X=0, d=0)) - 2023.47) \
+        < 0.1
+    assert throughput(t) == 1 / 494e-6
+
+
+def test_x_fraction_fit():
+    # §9: X ~= 0.53 T at seq 128
+    ts = [209789.0]
+    xs = [111708.0]
+    f = fit_x_fraction(xs, ts)
+    assert abs(f - 0.5325) < 0.01
+
+
+def test_bubble_fraction():
+    assert pipeline_bubble_fraction(1, 12) == 11 / 12
+    assert pipeline_bubble_fraction(44, 12) == 11 / 55
+    assert pipeline_bubble_fraction(100, 1) == 0.0
+
+
+def test_estimate_table2_structure():
+    t_by_seq = {1: 6936 * 5e-9, 128: 209789 * 5e-9}
+    x_by_seq = {1: 6936 * 5e-9, 128: 111708 * 5e-9}
+    out = estimate_table2(t_by_seq, x_by_seq, d=1.1e-6, n_stages=12)
+    assert out[128] > out[1]
+    assert set(out) == {1, 128}

@@ -1,0 +1,87 @@
+"""Optimizers: AdamW, int8-state AdamW, schedules, compression residuals."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compression import (
+    block_dequantize, block_quantize, quantize_residual,
+)
+from repro.optim.optimizer import (
+    adamw, adamw8, clip_by_global_norm, cosine_schedule, global_norm,
+    make_optimizer, sgdm,
+)
+
+
+def _quad_problem(opt_name, steps=60, lr=0.05):
+    """Minimize ||x - t||^2; returns final distance."""
+    t = jnp.asarray(np.linspace(-1, 1, 32), jnp.float32)
+    params = {"x": jnp.zeros((32,), jnp.float32)}
+    init, update = make_optimizer(opt_name, lambda s: jnp.float32(lr))
+    state = init(params)
+
+    def loss(p):
+        return jnp.sum((p["x"] - t) ** 2)
+
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = update(g, state, params, wd=0.0)
+    return float(jnp.max(jnp.abs(params["x"] - t)))
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adamw8", "sgdm"])
+def test_optimizers_converge(opt):
+    assert _quad_problem(opt) < 0.05
+
+
+def test_adamw8_tracks_adamw():
+    """int8 moment quantization must not change the trajectory materially."""
+    d1 = _quad_problem("adamw", steps=40)
+    d8 = _quad_problem("adamw8", steps=40)
+    assert abs(d1 - d8) < 0.1
+
+
+def test_adamw8_state_is_int8():
+    params = {"w": jnp.zeros((300,), jnp.float32)}
+    init, update = make_optimizer("adamw8", lambda s: jnp.float32(1e-3))
+    state = init(params)
+    assert state["m"]["w"]["q"].dtype == jnp.int8
+    g = {"w": jnp.ones((300,), jnp.float32)}
+    params2, state2 = update(g, state, params)
+    assert state2["m"]["w"]["q"].dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(params2["w"]))) > 0
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert abs(float(lr(jnp.asarray(10))) - 1.0) < 0.11
+    assert float(lr(jnp.asarray(100))) < 1e-6
+    assert float(lr(jnp.asarray(55))) < float(lr(jnp.asarray(20)))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_block_quantize_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3, (1000,)).astype(np.float32))
+    q, s, pad = block_quantize(x)
+    back = block_dequantize(q, s, pad, x.shape)
+    # per-block error <= block_scale/2
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert err.max() <= float(jnp.max(s)) * 0.5 + 1e-7
+
+
+def test_error_feedback_residual():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 1, (512,)).astype(np.float32))
+    (_, _, _), resid = quantize_residual(x)
+    # residual is exactly the quantization error
+    assert float(jnp.max(jnp.abs(resid))) <= float(
+        jnp.max(jnp.abs(x))) / 127 + 1e-6

@@ -1,0 +1,60 @@
+"""Quantization arithmetic properties (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.quant import (
+    INT8_MAX, QTensor, compute_scale, fake_quant, int8_matmul_ref, quantize,
+    requantize,
+)
+
+_settings = dict(max_examples=40, deadline=None)
+
+
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False), min_size=1,
+                max_size=200))
+@settings(**_settings)
+def test_quantize_roundtrip_error(vals):
+    x = np.asarray(vals, np.float32)
+    q = quantize(jnp.asarray(x))
+    err = np.abs(np.asarray(q.dequantize()) - x)
+    # symmetric quantization error <= scale/2 per element
+    assert err.max() <= float(q.scale) * 0.5 + 1e-6
+    assert np.abs(np.asarray(q.values)).max() <= INT8_MAX
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_int8_matmul_ref_matches_float(m, k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, (m, k)).astype(np.float32)
+    b = rng.normal(0, 1, (k, 8)).astype(np.float32)
+    qa, qb = quantize(jnp.asarray(a)), quantize(jnp.asarray(b))
+    out = int8_matmul_ref(qa, qb)
+    approx = np.asarray(out.values) * float(out.scale)
+    exact = a @ b
+    # error grows with sqrt(k) * scales
+    tol = 3 * np.sqrt(k) * float(qa.scale) * float(qb.scale) * 127
+    assert np.abs(approx - exact).max() <= tol + 1e-5
+
+
+@given(st.integers(0, 1000))
+@settings(**_settings)
+def test_requantize_idempotent_scale(seed):
+    rng = np.random.default_rng(seed)
+    acc = jnp.asarray(rng.integers(-10000, 10000, 64), jnp.int32)
+    s = jnp.float32(0.01)
+    out = requantize(acc, s, s * 100)  # shrink by 100x
+    # |values| clipped to int8 and dequantized value preserved within 1 lsb
+    deq_in = np.asarray(acc) * 0.01
+    deq_out = np.asarray(out, np.float64) * 1.0
+    mask = np.abs(deq_in) < 127 * 1.0
+    assert np.abs(deq_out - deq_in)[mask].max() <= 0.5 + 1e-6
+
+
+def test_fake_quant_fixedpoint():
+    x = jnp.asarray(np.linspace(-2, 2, 255), jnp.float32)
+    fq = fake_quant(x)
+    fq2 = fake_quant(fq)
+    np.testing.assert_allclose(np.asarray(fq), np.asarray(fq2), atol=1e-6)

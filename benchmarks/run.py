@@ -15,6 +15,9 @@ analytically onto the target part).
           and routing-table entries (2N-1 vs N^2)
   sec9  : v5e int8 roofline estimate of encoder latency (Versal analogue)
   gmi   : collective byte models — composed vs fused vs gateway-hierarchical
+  serve_cb: wave vs continuous-batching serving throughput + TTFT (§8.2)
+
+Run everything with no args, or a subset: ``python benchmarks/run.py serve_cb``.
 """
 from __future__ import annotations
 
@@ -210,17 +213,79 @@ def bench_int8_kernels(state: Dict) -> None:
     row("kernel_i_softmax_128x128", t * 1e6, "")
 
 
-def main() -> None:
+def serve_cb(state: Dict) -> None:
+    """§8.2 analogue: wave vs continuous-batching scheduling on a mixed
+    prompt-length / mixed decode-budget request stream (the regime where
+    batch-synchronous waves idle rows on the slowest member)."""
+    import jax as _jax
+    from repro.configs import get_config
+    from repro.models.transformer import init_params, make_model
+    from repro.serving.engine import ContinuousBatchingEngine, WaveEngine
+    from repro.serving.stream import poisson_requests, replay
+
+    cfg = get_config("smollm-135m").reduced()
+    model = make_model(cfg, remat=False)
+    params = init_params(cfg, _jax.random.PRNGKey(0))
+    stream = poisson_requests(np.random.default_rng(0), 24, cfg.vocab_size,
+                              len_range=(4, 28), budgets=(2, 33))
+
+    results = {}
+    for name, cls in (("wave", WaveEngine), ("cb", ContinuousBatchingEngine)):
+        eng = cls(model, params, max_batch=4, buckets=(16, 32))
+        replay(eng, stream, warmup=False)  # compile pass
+        steps0 = eng.stats["decode_steps"]
+        passes = []  # median of 3 measured passes (CPU box is noisy)
+        for _ in range(3):
+            passes.append(replay(eng, stream, warmup=False))
+        done, wall, tok_s, ttft = sorted(passes, key=lambda p: p[1])[1]
+        results[name] = tok_s
+        toks = sum(len(r.tokens_out) for r in done)
+        row(f"serve_{name}_per_token", wall / toks * 1e6,
+            f"{tok_s:.1f}tok/s ttft_p50={np.percentile(ttft, 50):.1f}ms "
+            f"ttft_p99={np.percentile(ttft, 99):.1f}ms "
+            f"decode_steps={(eng.stats['decode_steps'] - steps0) // 3}")
+    row("serve_cb_vs_wave_speedup", results["cb"] / results["wave"],
+        "continuous-batching tok/s over wave tok/s (>=1 expected)")
+    state["serve_cb_speedup"] = results["cb"] / results["wave"]
+
+
+BENCHES = {
+    "table1": table1_encoder_latency,
+    "table2": table2_full_model_eq1,
+    "table3": table3_padding_vs_nopadding,
+    "table4": table4_throughput,
+    "sec9": sec9_v5e_estimate,
+    "table5": table5_accelerator_comparison,
+    "fig15": fig15_cluster_resources,
+    "gmi": gmi_collective_models,
+    "kernels": bench_int8_kernels,
+    "serve_cb": serve_cb,
+}
+
+# benches whose state is produced by earlier benches in the full sweep
+_ORDER = ["table1", "table2", "table3", "table4", "sec9", "table5",
+          "fig15", "gmi", "kernels", "serve_cb"]
+_NEEDS = {"table2": ["table1"], "table3": ["table1"],
+          "table4": ["table1", "table3"], "table5": ["sec9"]}
+
+
+def main(argv=None) -> None:
+    import sys
+    names = (argv if argv is not None else sys.argv[1:]) or _ORDER
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:  # fail before running anything — compiles cost minutes
+        raise SystemExit(
+            f"unknown benchmark(s) {unknown}; choose from {sorted(BENCHES)}")
     state: Dict = {}
-    table1_encoder_latency(state)
-    table2_full_model_eq1(state)
-    table3_padding_vs_nopadding(state)
-    table4_throughput(state)
-    sec9_v5e_estimate(state)
-    table5_accelerator_comparison(state)
-    fig15_cluster_resources(state)
-    gmi_collective_models(state)
-    bench_int8_kernels(state)
+    ran = set()
+    for name in names:
+        for dep in _NEEDS.get(name, []):
+            if dep not in ran:
+                BENCHES[dep](state)
+                ran.add(dep)
+        if name not in ran:
+            BENCHES[name](state)
+            ran.add(name)
     print(f"\n{len(ROWS)} benchmark rows")
 
 

@@ -1,13 +1,20 @@
-"""End-to-end serving driver (the paper's kind: batched inference).
+"""End-to-end serving demo: continuous batching vs wave scheduling.
 
-Batched requests with mixed prompt lengths flow through bucketed prefill +
-greedy decode waves; reports the paper's latency/throughput quantities and
-the no-padding utilization win (§7.1/§8.2).
+A Poisson request stream (mixed GLUE-like prompt lengths, mixed decode
+budgets) flows through both schedulers:
+
+  * WaveEngine — the batch-synchronous baseline: batched prefill, decode to
+    the slowest member, tear down, next wave;
+  * ContinuousBatchingEngine — the paper's line-rate pipeline analogue
+    (§8.2): requests are admitted into freed KV-cache slots between decode
+    steps, so slots never idle while the queue is non-empty.
+
+Reports throughput + TTFT for both, and the no-padding utilization win
+(§7.1).
 
   PYTHONPATH=src python examples/serve_batched.py [--arch smollm-135m]
 """
 import argparse
-import time
 
 import numpy as np
 
@@ -16,43 +23,48 @@ import jax
 from repro.configs import get_config
 from repro.core.packing import padded_batch, pack_sequences
 from repro.models.transformer import init_params, make_model
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import ContinuousBatchingEngine, WaveEngine
+from repro.serving.stream import poisson_requests, replay
+
+
+def run_engine(name, engine, stream):
+    done, wall, tok_s, ttft = replay(engine, stream)
+    toks = sum(len(r.tokens_out) for r in done)
+    lat = [(r.t_done - r.t_enqueue) * 1e3 for r in done]
+    print(f"{name:5s}: {len(done)} requests, {toks} tokens in "
+          f"{wall*1e3:.0f} ms ({tok_s:.1f} tok/s); "
+          f"ttft p50={np.percentile(ttft, 50):.0f}ms "
+          f"p99={np.percentile(ttft, 99):.0f}ms; "
+          f"latency p50={np.percentile(lat, 50):.0f}ms")
+    print(f"       stats: {engine.stats}")
+    return tok_s
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = all at t=0")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     model = make_model(cfg, remat=False)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(model, params, max_batch=4, buckets=(16, 32, 64))
 
-    rng = np.random.default_rng(0)
-    # GLUE-like variable lengths (paper: avg 38 of max 128 — scaled down)
-    lengths = rng.integers(4, 30, args.requests)
-    t0 = time.perf_counter()
-    for i, n in enumerate(lengths):
-        engine.submit(Request(
-            rid=i, prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
-            max_new_tokens=args.max_new))
-    done = engine.run()
-    wall = time.perf_counter() - t0
-
-    lat = [(r.t_done - r.t_enqueue) * 1e3 for r in done]
-    ttft = [(r.t_first_token - r.t_enqueue) * 1e3 for r in done]
-    toks = sum(len(r.tokens_out) for r in done)
-    print(f"served {len(done)} requests in {wall*1e3:.0f} ms "
-          f"({toks/wall:.1f} tok/s)")
-    print(f"latency ms: p50={np.percentile(lat,50):.0f} "
-          f"p99={np.percentile(lat,99):.0f}; "
-          f"ttft p50={np.percentile(ttft,50):.0f}")
-    print(f"engine stats: {engine.stats}")
+    wave = WaveEngine(model, params, max_batch=4, buckets=(16, 32, 64))
+    cb = ContinuousBatchingEngine(model, params, max_batch=4,
+                                  buckets=(16, 32, 64))
+    reqs = poisson_requests(np.random.default_rng(0), args.requests,
+                            cfg.vocab_size, len_range=(4, 30),
+                            budgets=(2, 17), rate=args.rate)
+    thr_w = run_engine("wave", wave, reqs)
+    thr_c = run_engine("cb", cb, reqs)
+    print(f"continuous/wave throughput: {thr_c/thr_w:.2f}x")
 
     # the no-padding story: utilization packed vs padded (paper Table 3/4)
+    rng = np.random.default_rng(1)
+    lengths = [len(r.prompt) for r in reqs]
     seqs = [rng.integers(0, 100, n).astype(np.int32) for n in lengths]
     packed = pack_sequences(seqs, 32)
     padded = padded_batch(seqs, 32)

@@ -126,10 +126,31 @@ class ClusterPlan:
     param_specs: Any = None
     cache_specs: Any = None
     data_spec: Any = None
+    mode: str = "train"
+    fsdp: bool = True
     notes: List[str] = field(default_factory=list)
 
     def sharding(self, spec: P) -> NamedSharding:
         return NamedSharding(self.mesh, spec)
+
+    # -- late-binding specs (the serving engine builds its slot-table cache
+    #    after the plan exists, so specs must be derivable post-hoc) --------
+
+    def specs_for_params(self, params_shape: Any) -> Any:
+        r = Rules(self.mesh, self.axes, fsdp=self.fsdp)
+        return _tree_specs(
+            params_shape, lambda p, s: _param_spec(p, s, r, self.cfg.family))
+
+    def specs_for_caches(self, caches_shape: Any, batch: int = 0,
+                         slot_table: bool = False) -> Any:
+        """slot_table=True: the continuous-batching engine's persistent
+        cache, admitted into at traced slot indices — the slot (batch) dim
+        must stay unsharded or every insert crosses data shards."""
+        r = Rules(self.mesh, self.axes, fsdp=self.fsdp)
+        return _tree_specs(
+            caches_shape,
+            lambda p, s: _cache_spec(p, s, r, batch, mode=self.mode,
+                                     slot_table=slot_table))
 
 
 def _axsize(mesh: Mesh, axes) -> int:
@@ -238,23 +259,33 @@ def _param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
 
 
 def _cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], r: Rules,
-                batch: int) -> P:
+                batch: int, mode: str = "train",
+                slot_table: bool = False) -> P:
     name = path[-1]
     in_scan = "scan" in path
     off = 1 if in_scan else 0
     s = shape[off:]
     dp = None
-    for cand in r.dp_opts:
-        n = 1
-        for a in cand:
-            n *= r.mesh.shape[a]
-        if s and s[0] % n == 0:
-            dp = cand if len(cand) > 1 else cand[0]
-            break
+    if not slot_table:  # slot tables: inserts at traced slots stay local
+        for cand in r.dp_opts:
+            n = 1
+            for a in cand:
+                n *= r.mesh.shape[a]
+            if s and s[0] % n == 0:
+                dp = cand if len(cand) > 1 else cand[0]
+                break
     parts: List[Any] = [None] * len(shape)
     if s:
         parts[off] = dp  # batch dim
-    if name in ("k", "v") and len(s) == 4:
+    if name in ("k", "v") and len(s) == 4 and mode == "serve":
+        # slot-table layout (continuous batching): the cache is persistent
+        # for the whole serving session, so the one-off insert reshard at
+        # admission amortizes over the slot's lifetime.  TP the kv-head dim
+        # only — decode reads split across `model`, while per-slot inserts
+        # and per-step KV writes (batch + seq addressed) stay shard-local.
+        if s[2] % r.tp_n == 0:
+            parts[off + 2] = r.axes.tp
+    elif name in ("k", "v") and len(s) == 4:
         # prefer kv-head TP; else shard head_dim (decode writes at dynamic
         # seq slots stay shard-local; a seq-sharded cache makes SPMD
         # replicate the buffer around every cache write — §Perf 0.7).
@@ -314,15 +345,12 @@ def build_plan(cfg: ModelConfig, mesh: Mesh,
     if mode == "serve":
         per_chip = cfg.param_count() * 2 / _axsize(mesh, axes.tp)
         fsdp = per_chip > 8e9  # keep FSDP only when capacity demands it
-    r = Rules(mesh, axes, fsdp=fsdp)
     plan = ClusterPlan(cfg=cfg, axes=axes, mesh=mesh,
-                       topology=build_topology(cfg))
+                       topology=build_topology(cfg), mode=mode, fsdp=fsdp)
     if params_shape is not None:
-        plan.param_specs = _tree_specs(
-            params_shape, lambda p, s: _param_spec(p, s, r, cfg.family))
+        plan.param_specs = plan.specs_for_params(params_shape)
     if caches_shape is not None:
-        plan.cache_specs = _tree_specs(
-            caches_shape, lambda p, s: _cache_spec(p, s, r, batch))
+        plan.cache_specs = plan.specs_for_caches(caches_shape, batch)
     # batch specs
     dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
 

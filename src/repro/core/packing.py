@@ -10,6 +10,9 @@ NUM_PE * ceil(M / NUM_PE).  Under XLA's static shapes the equivalents are:
     into fixed (B, S) rows with segment_ids + per-token positions; attention
     masks cross-segment pairs (models/attention.py), so no FLOPs are spent
     attending across packed neighbors and utilization ~= sum(len)/B*S.
+  * `AdmissionPolicy`: per-slot bucket admission ordering for the
+    continuous-batching serving engine (docs/serving.md) — deadline-overdue
+    FIFO first, then warm (already-compiled) buckets.
 
 Both are exercised by the Table-3/Table-4 benchmarks (padding vs no-padding).
 """
@@ -79,6 +82,53 @@ def pack_sequences(seqs: List[np.ndarray], row_len: int) -> Packed:
             cur += n
             sid += 1
     return Packed(tokens, seg, pos, n_segments=sid)
+
+
+@dataclass
+class AdmissionPolicy:
+    """Per-slot bucket admission for the continuous-batching engine.
+
+    Admission is work-conserving: whenever a slot is free and a request has
+    arrived, something is admitted (no holding slots back to fill a bucket —
+    the paper's pipeline never waits for a wave, §8.2).  The policy only
+    decides *order*:
+
+      * requests whose queue wait exceeds the deadline go first, FIFO
+        (runtime/stragglers.AdmissionDeadline — the deadline that used to
+        launch partial waves now bounds admission reordering);
+      * otherwise requests whose bucket is already compiled ("warm") are
+        preferred, so steady-state admission never stalls the decode loop
+        on a prefill compile;
+      * ties break FIFO.
+
+    `deadline` is any object with ``overdue(wait_s) -> bool``.
+    """
+
+    buckets: Sequence[int]
+    lane: int = 8
+    deadline: object = None
+
+    def bucket_of(self, prompt_len: int) -> int:
+        return bucket_len(prompt_len, self.buckets, lane=self.lane)
+
+    def select(self, waiting: Sequence, n_free: int, warm=(),
+               now: float = 0.0) -> List[int]:
+        """Indices into `waiting` (arrival order) to admit, at most n_free.
+
+        Each element of `waiting` needs `.prompt` and `.t_arrival` (seconds,
+        relative to the same clock as `now`).
+        """
+        warm = set(warm)
+
+        def key(ix: int):
+            r = waiting[ix]
+            wait = now - r.t_arrival
+            if self.deadline and self.deadline.overdue(wait):
+                return (0, 0, ix)  # overdue: strict FIFO, warmth ignored
+            cold = self.bucket_of(len(r.prompt)) not in warm
+            return (1, 1 if cold else 0, ix)
+
+        return sorted(range(len(waiting)), key=key)[:n_free]
 
 
 def padded_batch(seqs: List[np.ndarray], row_len: int) -> Packed:

@@ -21,7 +21,18 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-shard_map = jax.shard_map
+try:  # jax >= 0.6 top-level API with check_vma
+    shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+except AttributeError:  # older jax: experimental namespace, check_rep kwarg
+    from jax.experimental.shard_map import shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
+
+def shard_map_compat(f, mesh: Mesh, in_specs, out_specs):
+    """shard_map with replication checking off, across jax versions."""
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     **_SHARD_MAP_KW)
 
 
 def pipeline_steps(n_micro: int, n_stages: int) -> int:
@@ -77,5 +88,5 @@ def pipelined_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
         body, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )(stage_params, x_micro)

@@ -18,20 +18,36 @@ from __future__ import annotations
 from typing import Optional, Sequence, Tuple
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 explicit-sharding API; absent on older jaxlibs
+    from jax.sharding import AxisType
+except (ImportError, AttributeError):  # deprecation shims raise AttributeError
+    AxisType = None
+
+
+def _axis_types_kw(n: int) -> dict:
+    return {} if AxisType is None else {"axis_types": (AxisType.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_types_kw(len(axes)))
 
 
 def make_mesh(shape: Sequence[int], axes: Sequence[str]):
     """Arbitrary mesh (tests, elastic re-meshing)."""
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+                         **_axis_types_kw(len(shape)))
+
+
+def make_abstract_mesh(shape: Sequence[int], axes: Sequence[str]):
+    """Device-free mesh for spec-only planning (tests, plan inspection)."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:  # older jax: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def required_devices(multi_pod: bool = False) -> int:

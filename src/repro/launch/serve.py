@@ -1,9 +1,14 @@
-"""Serving driver CLI: bring up the engine for any --arch and serve a
-synthetic request stream (the paper's kind of deployment: batched inference
-behind a line-rate ingress, §8).
+"""Serving driver CLI: bring up the continuous-batching engine for any
+--arch and serve a Poisson request stream (the paper's kind of deployment:
+a line-rate ingress feeding a spatial pipeline that never waits for a full
+batch, §8.2).
+
+Requests are submitted with exponential inter-arrival gaps and admitted
+into freed KV-cache slots between decode steps; weights and the slot cache
+are placed under the Cluster-Builder serve plan.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
-      --requests 16
+      --requests 16 --rate 50
 """
 from __future__ import annotations
 
@@ -15,9 +20,12 @@ import numpy as np
 import jax
 
 from repro.configs import get_config
+from repro.core.cluster_builder import build_plan
+from repro.launch.mesh import make_mesh
 from repro.models.transformer import init_params, make_model
 from repro.runtime.stragglers import StragglerMonitor
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import ContinuousBatchingEngine, WaveEngine
+from repro.serving.stream import poisson_requests
 
 
 def main(argv=None):
@@ -27,6 +35,11 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = all at t=0")
+    ap.add_argument("--engine", choices=["cb", "wave"], default="cb")
+    ap.add_argument("--no-plan", action="store_true",
+                    help="skip Cluster-Builder placement (debug)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -35,28 +48,35 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = make_model(cfg, remat=False)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    engine = ServingEngine(model, params, max_batch=args.max_batch,
-                           buckets=(16, 32, 64, 128))
+    plan = None
+    if not args.no_plan:
+        n_dev = jax.device_count()
+        mesh = make_mesh((1, n_dev), ("data", "model"))
+        plan = build_plan(cfg, mesh, jax.eval_shape(lambda: params),
+                          mode="serve")
     monitor = StragglerMonitor()
+    cls = ContinuousBatchingEngine if args.engine == "cb" else WaveEngine
+    engine = cls(model, params, max_batch=args.max_batch,
+                 buckets=(16, 32, 64, 128), plan=plan, monitor=monitor)
 
     rng = np.random.default_rng(args.seed)
-    lengths = rng.integers(4, 60, args.requests)
     t0 = time.perf_counter()
-    for i, n in enumerate(lengths):
-        engine.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size, n).astype(np.int32),
-            max_new_tokens=args.max_new))
+    for r in poisson_requests(rng, args.requests, cfg.vocab_size,
+                              len_range=(4, 60), budgets=args.max_new,
+                              rate=args.rate):
+        engine.submit(r)
     done = engine.run()
     wall = time.perf_counter() - t0
-    monitor.observe(0, wall)
 
     toks = sum(len(r.tokens_out) for r in done)
     lat = sorted((r.t_done - r.t_enqueue) * 1e3 for r in done)
-    print(f"serve: arch={cfg.name} requests={len(done)} tokens={toks} "
-          f"wall={wall*1e3:.0f}ms throughput={toks/wall:.1f}tok/s "
+    ttft = sorted((r.t_first_token - r.t_enqueue) * 1e3 for r in done)
+    print(f"serve[{args.engine}]: arch={cfg.name} requests={len(done)} "
+          f"tokens={toks} wall={wall*1e3:.0f}ms "
+          f"throughput={toks/wall:.1f}tok/s "
+          f"ttft_p50={ttft[len(ttft)//2]:.0f}ms "
           f"p50={lat[len(lat)//2]:.0f}ms p_max={lat[-1]:.0f}ms "
-          f"waves={engine.stats['waves']}")
+          f"stats={engine.stats}")
     return done
 
 

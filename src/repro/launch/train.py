@@ -236,6 +236,7 @@ def main(argv=None) -> Dict[str, Any]:
         ckpt.save(step, {"params": state["params"]})
 
     def restore():
+        ckpt.wait()  # an in-flight async save must land before we pick
         latest = ckpt.latest_step()
         if latest is None:
             return None

@@ -123,6 +123,36 @@ def block_init_state(cfg: ModelConfig, pos_in_period: int, batch: int,
 
 
 # ---------------------------------------------------------------------------
+# cache pytree utilities (slot-table serving)
+# ---------------------------------------------------------------------------
+
+
+def cache_map(fn, *trees):
+    """Map ``fn(batch_axis, *leaves)`` over cache pytrees.
+
+    Cache trees are ``{"scan": ..., "tail": ..., "pos": ...}``; leaves under
+    "scan" carry a leading stacked-period dim, so their batch axis is 1,
+    everything else has batch at axis 0.  Used by the serving engine's
+    per-slot insert/select operations, which must address the batch dim.
+    """
+
+    def go(axis, *subs):
+        if isinstance(subs[0], dict):
+            return {k: go(axis, *[s[k] for s in subs]) for k in subs[0]}
+        return fn(axis, *subs)
+
+    return {k: go(1 if k == "scan" else 0, *[t[k] for t in trees])
+            for k in trees[0]}
+
+
+def _batch_broadcast(mask: jax.Array, axis: int, ndim: int):
+    """(B,) mask -> shape broadcastable against a leaf with batch at `axis`."""
+    shape = [1] * ndim
+    shape[axis] = mask.shape[0]
+    return mask.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
 # full model
 # ---------------------------------------------------------------------------
 
@@ -282,8 +312,16 @@ class Model:
         h_last = h[bidx, last_idx][:, None]
         return lm_head(h_last, params["embed"])[:, 0], caches
 
-    def decode_step(self, params, caches, token: jax.Array):
-        """token: (B,) int32 (or (B,D) embeds for stub frontends)."""
+    def decode_step(self, params, caches, token: jax.Array,
+                    active: Optional[jax.Array] = None):
+        """token: (B,) int32 (or (B,D) embeds for stub frontends).
+
+        active: optional (B,) bool slot mask (continuous batching).  Rows
+        with ``active=False`` are computed (the batch shape is static) but
+        their cache entries and position counters are left untouched, so a
+        free/finished slot cannot corrupt its state between an occupant
+        finishing and the next admission overwriting the slot.
+        """
         if token.ndim == 1:
             x = self.embed_inputs(params, tokens=token[:, None])
         else:
@@ -291,8 +329,36 @@ class Model:
         positions = caches["pos"][:, None]
         sub = {"scan": caches["scan"], "tail": caches["tail"]}
         h, sub, _ = self.backbone(params, x, positions, caches=sub)
-        caches = dict(sub, pos=caches["pos"] + 1)
-        return lm_head(h[:, -1:], params["embed"])[:, 0], caches
+        new_caches = dict(sub, pos=caches["pos"] + 1)
+        if active is not None:
+            new_caches = cache_map(
+                lambda ax, new, old: jnp.where(
+                    _batch_broadcast(active, ax, new.ndim), new, old),
+                new_caches, caches)
+        return lm_head(h[:, -1:], params["embed"])[:, 0], new_caches
+
+    def insert_prefill_cache(self, big, small, slot: jax.Array):
+        """Write batch-1 prefill caches `small` into row `slot` of the
+        persistent slot table `big` (prefill-on-admission).
+
+        Leaf shapes must match except the batch dim (1 vs max_batch) and,
+        optionally, the KV slot dim, which may be shorter in `small` when
+        prefill ran with a smaller bucket cache; the gap is refilled with
+        zeros (k/v) or the never-written position sentinel (kpos), so stale
+        entries from the slot's previous occupant can never be attended to.
+        """
+        slot = jnp.asarray(slot, jnp.int32)
+
+        def leaf(axis, b, s):
+            s = s.astype(b.dtype)
+            tgt = b.shape[:axis] + (1,) + b.shape[axis + 1:]
+            if s.shape != tgt:
+                fill = 2 ** 30 if b.dtype == jnp.int32 else 0  # kpos sentinel
+                pad = [(0, t - d) for t, d in zip(tgt, s.shape)]
+                s = jnp.pad(s, pad, constant_values=fill)
+            return jax.lax.dynamic_update_slice_in_dim(b, s, slot, axis=axis)
+
+        return cache_map(leaf, big, small)
 
 
 def make_model(cfg: ModelConfig, remat: bool = True) -> Model:

@@ -8,8 +8,11 @@ slower than `threshold` x EMA, and drives two mitigations:
     step is dropped and the gradient is rescaled (bounded staleness — the
     SPMD equivalent of the paper's per-cluster input buffering riding out a
     slow cluster).
-  * deadline batching (serving): a decode wave launches at the deadline with
-    whatever requests arrived, instead of waiting for a full batch.
+  * admission deadline (serving): the continuous-batching engine admits
+    requests into freed slots between decode steps; `AdmissionDeadline`
+    bounds how long an arrived request may be jumped by warm-bucket peers
+    before it is force-admitted FIFO.  (The legacy wave engine used the
+    same deadline to launch partial waves.)
 
 On this CPU container the "slow node" is injected by tests via a delay hook.
 """
@@ -50,6 +53,22 @@ class StragglerMonitor:
     @property
     def ema(self) -> Optional[float]:
         return self._ema
+
+
+@dataclass
+class AdmissionDeadline:
+    """Serving admission deadline (paper §8.2 line-rate ingress analogue).
+
+    A request that has waited longer than `deadline_s` since arrival takes
+    absolute priority in core/packing.AdmissionPolicy — bucket-warmth
+    preferences may reorder younger requests only.  deadline_s <= 0 disables
+    reordering entirely (strict FIFO admission).
+    """
+
+    deadline_s: float = 0.05
+
+    def overdue(self, wait_s: float) -> bool:
+        return wait_s >= self.deadline_s
 
 
 def timed(monitor: StragglerMonitor, step: int, fn: Callable, *args, **kw):

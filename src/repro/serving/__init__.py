@@ -1,1 +1,3 @@
-from repro.serving.engine import Request, ServingEngine  # noqa: F401
+from repro.serving.engine import (  # noqa: F401
+    ContinuousBatchingEngine, EngineBase, Request, ServingEngine, WaveEngine,
+)

@@ -1,16 +1,27 @@
-"""Batched serving engine: wave-scheduled prefill + decode.
+"""Serving stack: slot-based continuous batching driven by the Cluster plan.
 
-The paper's system is an inference pipeline fed by an input FPGA at line
-rate (§8.2), with the no-padding optimization cutting latency on short GLUE
-sequences.  Our engine serves batched requests the same way:
+The paper's deployment is a spatial pipeline fed at line rate (§8.2):
+requests stream through the 6-FPGA encoder cluster continuously, never
+waiting for a "wave" to fill.  The engine mirrors that with *slots*:
 
-  * requests are bucketed to the smallest compiled prompt length
-    (core/packing.bucket_len — the minimum-padding rule)
-  * a wave = up to `max_batch` requests: one batched prefill, then decode
-    steps until every request hit its token budget or EOS
-  * a deadline (stragglers.py) launches partial waves instead of waiting
-  * jit programs are cached per (bucket, batch) so steady-state serving
-    never recompiles
+  * a persistent KV cache with `max_batch` slot rows, allocated once per
+    (slot, cache_len) shape and sharded by the Cluster-Builder serve-mode
+    cache specs (`build_plan(..., mode="serve")`);
+  * prefill-on-admission: a freed slot is refilled between decode steps by
+    a batch-1 bucketed prefill whose cache is written into the slot row via
+    a jitted `insert_prefill_cache` — the rest of the batch keeps decoding,
+    nothing is torn down;
+  * an admission policy (core/packing.AdmissionPolicy) that orders waiting
+    requests by deadline overdue-ness (runtime/stragglers.AdmissionDeadline)
+    then bucket warmth, so steady state never stalls on a prefill compile;
+  * plan-aware execution: with a `ClusterPlan`, params and the slot cache
+    are placed with `jax.device_put` under the plan's `NamedSharding`s and
+    prefill/decode are jitted with `in_shardings`/`out_shardings` — the
+    engine is the runtime consumer of the Cluster Builder's serve plan.
+
+`WaveEngine` keeps the seed's batch-synchronous scheduler (one batched
+prefill, decode to the slowest request) as the measured baseline for the
+`benchmarks/run.py serve_cb` comparison.
 """
 from __future__ import annotations
 
@@ -21,137 +32,372 @@ from typing import Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
-from repro.core.packing import bucket_len
+from repro.core.packing import AdmissionPolicy, bucket_len
 from repro.models.transformer import Model
+from repro.runtime.stragglers import AdmissionDeadline, StragglerMonitor
+
+PAD_TOKEN = 0  # fed for finished/free slot rows; their logits are never read
 
 
-@dataclass
-class Request:
+@dataclass(eq=False)  # identity equality: rid is caller-chosen, prompt is a
+class Request:        # numpy array (== would be ambiguous), requests mutate
     rid: int
     prompt: np.ndarray  # (len,) int32
     max_new_tokens: int = 16
     eos_id: int = -1  # -1: never
+    t_arrival: float = 0.0  # seconds after engine start (Poisson streams)
     tokens_out: List[int] = field(default_factory=list)
     done: bool = False
     t_enqueue: float = 0.0
+    t_admitted: float = 0.0
     t_first_token: float = 0.0
     t_done: float = 0.0
 
+    def append_token(self, tok: int, now: float) -> None:
+        assert not self.done, \
+            f"request {self.rid}: token appended after done"
+        if not self.tokens_out:
+            self.t_first_token = now
+        self.tokens_out.append(int(tok))
+        if tok == self.eos_id or len(self.tokens_out) >= self.max_new_tokens:
+            self.done = True
+            self.t_done = now
 
-class ServingEngine:
+
+class EngineBase:
+    """Shared plumbing: plan placement, jit caches, bucketed prefill."""
+
     def __init__(self, model: Model, params, max_batch: int = 8,
                  buckets=(32, 64, 128, 256), greedy: bool = True,
-                 deadline_s: float = 0.05):
+                 deadline_s: float = 0.05, plan=None,
+                 max_decode_len: int = 64,
+                 monitor: Optional[StragglerMonitor] = None):
         self.model = model
-        self.params = params
         self.max_batch = max_batch
-        self.buckets = buckets
+        self.buckets = tuple(sorted(buckets))
         self.greedy = greedy
-        self.deadline_s = deadline_s
+        self.plan = plan
+        self.monitor = monitor
+        self.policy = AdmissionPolicy(
+            buckets=self.buckets, lane=8,
+            deadline=AdmissionDeadline(deadline_s))
+        # slot rows hold prompt KV + decode headroom; fixed so the decode
+        # program compiles exactly once per engine
+        self.cache_len = bucket_len(max(self.buckets), self.buckets,
+                                    lane=8) + max_decode_len
         self._queue: List[Request] = []
-        self._jit_prefill: Dict[tuple, Callable] = {}
+        self._jit_prefill: Dict = {}
         self._jit_decode: Optional[Callable] = None
-        self.stats = {"waves": 0, "prefill_tokens": 0, "decode_steps": 0}
+        self._jit_insert: Optional[Callable] = None
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0}
 
-    # -- public ----------------------------------------------------------------
+        self._param_shardings = None
+        self._cache_shardings = None
+        self._rep = None
+        if plan is not None:
+            if plan.param_specs is None:
+                plan.param_specs = plan.specs_for_params(
+                    jax.eval_shape(lambda: params))
+            self._param_shardings = jax.tree.map(plan.sharding,
+                                                 plan.param_specs)
+            self._rep = plan.sharding(P())
+            params = jax.device_put(params, self._param_shardings)
+        self.params = params
+
+    # -- public ---------------------------------------------------------------
 
     def submit(self, req: Request) -> None:
+        need = self.policy.bucket_of(len(req.prompt)) + req.max_new_tokens
+        if need > self.cache_len:
+            raise ValueError(
+                f"request {req.rid}: bucket+budget {need} exceeds slot "
+                f"cache_len {self.cache_len} (raise max_decode_len)")
         req.t_enqueue = time.perf_counter()
         self._queue.append(req)
 
     def run(self) -> List[Request]:
-        """Serve until the queue drains; returns completed requests."""
-        done: List[Request] = []
-        while self._queue:
-            wave = self._take_wave()
-            done += self._serve_wave(wave)
-        return done
+        raise NotImplementedError
 
-    # -- internals ---------------------------------------------------------------
+    # -- jitted programs ------------------------------------------------------
 
-    def _take_wave(self) -> List[Request]:
-        t0 = time.perf_counter()
-        while (len(self._queue) < self.max_batch
-               and time.perf_counter() - t0 < self.deadline_s):
-            break  # single-threaded here: the deadline matters with async submit
-        wave = self._queue[: self.max_batch]
-        self._queue = self._queue[self.max_batch:]
-        return wave
-
-    def _prefill_fn(self, bucket: int, batch: int):
-        key = (bucket, batch)
+    def _prefill_fn(self, bucket: int, batch: int, cache_slots: int):
+        key = (bucket, batch, cache_slots)
         if key not in self._jit_prefill:
+            model = self.model
+
             def fn(params, tokens, positions, lengths):
-                caches = self.model.init_cache(batch, bucket + 64)
-                logits, caches = self.model.prefill(
+                caches = model.init_cache(batch, cache_slots)
+                logits, caches = model.prefill(
                     params, caches, tokens=tokens, positions=positions,
                     last_idx=lengths - 1)
                 return logits, caches
 
-            self._jit_prefill[key] = jax.jit(fn)
+            kw = {}
+            if self.plan is not None:
+                kw["in_shardings"] = (self._param_shardings, self._rep,
+                                      self._rep, self._rep)
+            self._jit_prefill[key] = jax.jit(fn, **kw)
         return self._jit_prefill[key]
 
     def _decode_fn(self):
         if self._jit_decode is None:
-            def fn(params, caches, token):
-                return self.model.decode_step(params, caches, token)
+            model = self.model
 
-            self._jit_decode = jax.jit(fn)
+            def fn(params, caches, token, active):
+                return model.decode_step(params, caches, token,
+                                         active=active)
+
+            kw = {}
+            if self.plan is not None:
+                kw["in_shardings"] = (self._param_shardings,
+                                      self._cache_shardings, self._rep,
+                                      self._rep)
+                kw["out_shardings"] = (self._rep, self._cache_shardings)
+            self._jit_decode = jax.jit(fn, donate_argnums=(1,), **kw)
         return self._jit_decode
 
-    def _serve_wave(self, wave: List[Request]) -> List[Request]:
-        self.stats["waves"] += 1
-        b = len(wave)
+    def _prefill_batch(self, wave: List[Request], batch: int,
+                       bucket_cache: bool = False):
+        """Bucketed left-aligned batched prefill; returns (logits, caches).
+
+        bucket_cache=True writes a bucket-sized cache (the slot engine's
+        admission path: `insert_prefill_cache` pads it up to the slot row);
+        otherwise the cache has the full cache_len the wave engine decodes
+        into directly.
+        """
         maxlen = max(len(r.prompt) for r in wave)
         bucket = bucket_len(maxlen, self.buckets, lane=8)
-        toks = np.zeros((b, bucket), np.int32)
-        # left-aligned prompts; pad positions = 2^30 so the causal mask can
-        # never attend to them (and cache slot i == position i for decode)
-        pos = np.full((b, bucket), 2**30, np.int32)
+        cache_slots = bucket if bucket_cache else self.cache_len
+        toks = np.zeros((batch, bucket), np.int32)
+        # pad positions = 2^30 so the causal mask can never attend to them
+        # (and cache slot i == position i for decode)
+        pos = np.full((batch, bucket), 2 ** 30, np.int32)
+        lengths = np.ones((batch,), np.int32)
         for i, r in enumerate(wave):
             n = len(r.prompt)
             toks[i, :n] = r.prompt
             pos[i, :n] = np.arange(n)
-        lengths = np.array([len(r.prompt) for r in wave], np.int32)
-        self.stats["prefill_tokens"] += int(lengths.sum())
-
-        logits, caches = self._prefill_fn(bucket, b)(
+            lengths[i] = n
+        self.stats["prefill_tokens"] += int(sum(len(r.prompt) for r in wave))
+        return self._prefill_fn(bucket, batch, cache_slots)(
             self.params, jnp.asarray(toks), jnp.asarray(pos),
             jnp.asarray(lengths))
+
+    def _greedy_next(self, logits) -> np.ndarray:
+        return np.asarray(jnp.argmax(logits, -1), np.int32)
+
+
+class ContinuousBatchingEngine(EngineBase):
+    """Slot-asynchronous scheduler: admit into freed slots between steps."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.stats.update(admitted=0, completed=0, prefills=0)
+        self._slot_caches = None
+
+    # -- internals ------------------------------------------------------------
+
+    def _init_slot_caches(self):
+        caches = self.model.init_cache(self.max_batch, self.cache_len)
+        if self.plan is not None:
+            specs = self.plan.specs_for_caches(
+                jax.eval_shape(lambda: caches), batch=self.max_batch,
+                slot_table=True)
+            self._cache_shardings = jax.tree.map(self.plan.sharding, specs)
+            caches = jax.device_put(caches, self._cache_shardings)
+        return caches
+
+    def _insert_fn(self):
+        if self._jit_insert is None:
+            model = self.model
+
+            def fn(big, small, slot):
+                return model.insert_prefill_cache(big, small, slot)
+
+            kw = {}
+            if self.plan is not None:
+                kw["out_shardings"] = self._cache_shardings
+            self._jit_insert = jax.jit(fn, donate_argnums=(0,), **kw)
+        return self._jit_insert
+
+    def _admit(self, req: Request, slot: int, caches):
+        """Batch-1 prefill + jitted insert into `slot`; returns (caches, tok).
+
+        The first token comes straight from the prefill logits, so TTFT is
+        paid at admission, not at the next decode step.
+        """
+        logits, small = self._prefill_batch([req], 1, bucket_cache=True)
+        caches = self._insert_fn()(caches, small, slot)
+        self.stats["prefills"] += 1
+        self.stats["admitted"] += 1
+        return caches, int(self._greedy_next(logits)[0])
+
+    # -- scheduler loop -------------------------------------------------------
+
+    def run(self) -> List[Request]:
+        """Serve until queue + slots drain; returns requests sorted by rid.
+
+        Admission honours `Request.t_arrival` (seconds after this call), so
+        a Poisson stream can be replayed by submitting everything up front.
+        """
+        if self._slot_caches is None:
+            self._slot_caches = self._init_slot_caches()
+        caches = self._slot_caches
+        # decode/insert donate the cache buffers: until the loop finishes,
+        # self._slot_caches may reference deleted arrays.  Drop the handle
+        # so an abnormal exit (interrupt, OOM) re-allocates on the next run
+        # instead of poisoning the engine; restored on normal completion.
+        self._slot_caches = None
         decode = self._decode_fn()
+        done: List[Request] = []
+        pending = self._queue
+        self._queue = []
+        slots: List[Optional[Request]] = [None] * self.max_batch
+        cur = np.full((self.max_batch,), PAD_TOKEN, np.int32)
+        t0 = time.perf_counter()
+        for r in pending:  # latency clocks start at simulated arrival
+            r.t_enqueue = max(r.t_enqueue, t0 + r.t_arrival)
+
+        while pending or any(r is not None for r in slots):
+            now = time.perf_counter() - t0
+            free = [i for i, r in enumerate(slots) if r is None]
+            arrived = [r for r in pending if r.t_arrival <= now]
+            if free and arrived:
+                pick = self.policy.select(
+                    arrived, len(free),
+                    warm=[b for (b, n, _) in self._jit_prefill if n == 1],
+                    now=now)
+                for r in [arrived[p] for p in pick]:
+                    pending.remove(r)
+                    sl = free.pop(0)
+                    caches, tok = self._admit(r, sl, caches)
+                    t_now = time.perf_counter()
+                    r.t_admitted = t_now
+                    r.append_token(tok, t_now)
+                    if r.done:  # budget of 1 or instant EOS: slot stays free
+                        done.append(r)
+                        free.insert(0, sl)
+                        self.stats["completed"] += 1
+                    else:
+                        slots[sl] = r
+                        cur[sl] = tok
+            if not any(r is not None for r in slots):
+                if pending:  # idle until the next arrival
+                    wait = min(r.t_arrival for r in pending) \
+                        - (time.perf_counter() - t0)
+                    if wait > 0:
+                        time.sleep(min(wait, 0.005))
+                continue
+
+            active = np.array([r is not None for r in slots])
+            t_step = time.perf_counter()
+            logits, caches = decode(self.params, caches, jnp.asarray(cur),
+                                    jnp.asarray(active))
+            nxt = self._greedy_next(logits)
+            self.stats["decode_steps"] += 1
+            if self.monitor is not None:
+                self.monitor.observe(self.stats["decode_steps"],
+                                     time.perf_counter() - t_step)
+            t_now = time.perf_counter()
+            for i, r in enumerate(slots):
+                if r is None:
+                    continue
+                r.append_token(int(nxt[i]), t_now)
+                if r.done:
+                    done.append(r)
+                    slots[i] = None
+                    cur[i] = PAD_TOKEN  # freed slot feeds pad, not stale tok
+                    self.stats["completed"] += 1
+                else:
+                    cur[i] = int(nxt[i])
+
+        self._slot_caches = caches
+        return sorted(done, key=lambda r: r.rid)
+
+
+class WaveEngine(EngineBase):
+    """The seed's batch-synchronous scheduler, kept as the measured baseline.
+
+    One batched prefill per wave, decode until every member finishes.  The
+    seed's dead deadline loop is gone (the deadline governs admission order
+    in the continuous engine instead), and finished rows feed PAD_TOKEN —
+    their cache rows are frozen by the decode active mask rather than
+    absorbing stale writes.
+    """
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.stats.update(waves=0)
+
+    def run(self) -> List[Request]:
+        done: List[Request] = []
+        pending = self._queue
+        self._queue = []
+        t0 = time.perf_counter()
+        for r in pending:  # latency clocks start at simulated arrival
+            r.t_enqueue = max(r.t_enqueue, t0 + r.t_arrival)
+        deadline_s = self.policy.deadline.deadline_s
+        while pending:
+            # deadline batching: launch a partial wave at the deadline with
+            # whatever requests arrived, instead of waiting for a full batch
+            while True:
+                now = time.perf_counter() - t0
+                arrived = [r for r in pending if r.t_arrival <= now]
+                if len(arrived) >= self.max_batch:
+                    break
+                if len(arrived) == len(pending):
+                    break  # nobody else can join: don't sit out the deadline
+                if arrived and now - min(
+                        r.t_arrival for r in arrived) >= deadline_s:
+                    break
+                nxt = min((r.t_arrival for r in pending
+                           if r.t_arrival > now), default=float("inf"))
+                wake = min([nxt] + [r.t_arrival + deadline_s
+                                    for r in arrived])
+                time.sleep(max(min(wake - now, 0.005), 0.0005))
+            wave = arrived[: self.max_batch]
+            for r in wave:
+                pending.remove(r)
+            done += self._serve_wave(wave)
+        return done
+
+    def _serve_wave(self, wave: List[Request]) -> List[Request]:
+        self.stats["waves"] += 1
+        b = len(wave)
+        logits, caches = self._prefill_batch(wave, b)
+        decode = self._decode_fn()
+        cur = np.full((b,), PAD_TOKEN, np.int32)
+        nxt = self._greedy_next(logits)
         now = time.perf_counter()
-        cur = np.asarray(jnp.argmax(logits, -1), np.int32)
         for i, r in enumerate(wave):
-            t = int(cur[i])
-            r.tokens_out.append(t)
-            r.t_first_token = now
-            if t == r.eos_id or r.max_new_tokens <= 1:
-                r.done = True
-                r.t_done = now
+            r.append_token(int(nxt[i]), now)
+            if not r.done:
+                cur[i] = int(nxt[i])
 
         budget = max(r.max_new_tokens for r in wave)
-        if all(r.done for r in wave):
-            budget = 0
         for _ in range(budget - 1):
-            logits, caches = decode(self.params, caches, jnp.asarray(cur))
-            self.stats["decode_steps"] += 1
-            cur = np.asarray(jnp.argmax(logits, -1), np.int32)
-            alive = False
-            for i, r in enumerate(wave):
-                if r.done or len(r.tokens_out) >= r.max_new_tokens:
-                    continue
-                t = int(cur[i])
-                r.tokens_out.append(t)
-                if t == r.eos_id or len(r.tokens_out) >= r.max_new_tokens:
-                    r.done = True
-                    r.t_done = time.perf_counter()
-                else:
-                    alive = True
-            if not alive:
+            if all(r.done for r in wave):
                 break
-        for r in wave:
-            r.done = True
-            if not r.t_done:
-                r.t_done = time.perf_counter()
+            active = np.array([not r.done for r in wave])
+            t_step = time.perf_counter()
+            logits, caches = decode(self.params, caches, jnp.asarray(cur),
+                                    jnp.asarray(active))
+            self.stats["decode_steps"] += 1
+            if self.monitor is not None:
+                self.monitor.observe(self.stats["decode_steps"],
+                                     time.perf_counter() - t_step)
+            nxt = self._greedy_next(logits)
+            now = time.perf_counter()
+            for i, r in enumerate(wave):
+                if r.done:
+                    cur[i] = PAD_TOKEN
+                    continue
+                r.append_token(int(nxt[i]), now)
+                cur[i] = PAD_TOKEN if r.done else int(nxt[i])
         return wave
+
+
+# the slot-based continuous-batching engine is the serving default
+ServingEngine = ContinuousBatchingEngine

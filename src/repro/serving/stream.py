@@ -1,0 +1,67 @@
+"""Synthetic request streams for the serving drivers and benchmarks.
+
+One generator and one warmup/measure harness shared by launch/serve.py,
+examples/serve_batched.py and benchmarks/run.py, so arrival semantics
+(`t_arrival` = seconds after the engine's run() starts, exponential
+inter-arrival gaps) and measurement methodology stay in one place.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple, Union
+
+import numpy as np
+
+from repro.serving.engine import Request
+
+
+def poisson_requests(rng: np.random.Generator, n: int, vocab_size: int,
+                     len_range: Tuple[int, int] = (4, 30),
+                     budgets: Union[int, Tuple[int, int]] = 8,
+                     rate: float = 0.0) -> List[Request]:
+    """n requests with uniform prompt lengths in ``len_range``, decode
+    budgets fixed (int) or uniform in a (lo, hi) range, and Poisson
+    arrivals at ``rate`` req/s (0 = everything arrives at t=0)."""
+    lengths = rng.integers(len_range[0], len_range[1], n)
+    if isinstance(budgets, tuple):
+        buds = rng.integers(budgets[0], budgets[1], n)
+    else:
+        buds = np.full(n, budgets)
+    gaps = (rng.exponential(1.0 / rate, n) if rate > 0
+            else np.zeros(n))
+    arrivals = np.cumsum(gaps)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab_size,
+                                        lengths[i]).astype(np.int32),
+                    max_new_tokens=int(buds[i]),
+                    t_arrival=float(arrivals[i]))
+            for i in range(n)]
+
+
+def clone_requests(reqs: List[Request]) -> List[Request]:
+    """Fresh Request objects over the same prompts/budgets/arrivals (for
+    replaying one stream through several engines)."""
+    return [Request(rid=r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens, eos_id=r.eos_id,
+                    t_arrival=r.t_arrival) for r in reqs]
+
+
+def replay(engine, stream: List[Request], warmup: bool = True):
+    """Run `stream` through `engine`; returns (done, wall_s, tok_s, ttft_ms).
+
+    warmup=True first replays the stream unmeasured so every program shape
+    is compiled, then measures a steady-state pass.  ttft_ms is the list of
+    per-request first-token latencies (measured from simulated arrival).
+    """
+    if warmup:
+        for r in clone_requests(stream):
+            engine.submit(r)
+        engine.run()
+    for r in clone_requests(stream):
+        engine.submit(r)
+    t0 = time.perf_counter()
+    done = engine.run()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.tokens_out) for r in done)
+    ttft = [(r.t_first_token - r.t_enqueue) * 1e3 for r in done]
+    return done, wall, toks / wall, ttft

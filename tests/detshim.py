@@ -1,0 +1,69 @@
+"""Deterministic stand-in for hypothesis when it is not installed.
+
+The property-test files guard their import:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ModuleNotFoundError:
+        from detshim import given, settings
+        import detshim as st
+
+Each strategy becomes a seeded draw function and ``@given`` replays a fixed
+number of deterministic examples, so the same bound checks run (with less
+search power) instead of the whole module failing at collection.  Seeds are
+derived with crc32 (stable across processes, unlike ``hash``).
+"""
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+N_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw  # rng -> value
+
+
+def floats(lo: float, hi: float, allow_nan: bool = False) -> _Strategy:
+    return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def integers(lo: int, hi: int) -> _Strategy:
+    return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: seq[int(rng.integers(0, len(seq)))])
+
+
+def lists(elem: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elem.draw(rng) for _ in range(n)]
+
+    return _Strategy(draw)
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        # no functools.wraps: pytest must see a zero-arg signature, not the
+        # wrapped function's parameters (it would hunt for fixtures)
+        def run():
+            for case in range(N_EXAMPLES):
+                seed = (zlib.crc32(fn.__name__.encode()) + case) % 2 ** 32
+                rng = np.random.default_rng(seed)
+                fn(*[s.draw(rng) for s in strats])
+
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        return run
+
+    return deco
+
+
+def settings(**_kw):
+    return lambda fn: fn

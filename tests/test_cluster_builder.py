@@ -4,18 +4,19 @@ import pytest
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config, list_archs
 from repro.core import cluster as cl
 from repro.core.cluster_builder import build_plan, build_topology
+from repro.launch.mesh import make_abstract_mesh
 from repro.models.transformer import init_params, make_model
 
 ARCHS = [a for a in list_archs() if a != "ibert-base"]
 
 
 def _mesh(shape=(16, 16), axes=("data", "model")):
-    return AbstractMesh(shape, axes)
+    return make_abstract_mesh(shape, axes)
 
 
 # -- topology (paper-faithful bookkeeping) -----------------------------------

@@ -26,12 +26,13 @@ PRELUDE = """
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core import gmi
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.core.pipeline import shard_map_compat
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("pod", "data"))
 x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4) + 1.0
 def run(fn, in_spec, out_spec):
-    return jax.shard_map(fn, mesh=mesh, in_specs=(in_spec,),
-                         out_specs=out_spec, check_vma=False)
+    return shard_map_compat(fn, mesh=mesh, in_specs=(in_spec,),
+                            out_specs=out_spec)
 """
 
 
@@ -98,8 +99,8 @@ def test_pipeline_matches_sequential():
     _run("""
 import numpy as np, jax, jax.numpy as jnp
 from repro.core.pipeline import pipelined_apply, pipeline_steps
-mesh = jax.make_mesh((4,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("stage",))
 w = jnp.asarray(np.random.default_rng(0).normal(0, 0.5, (4, 8, 8)).astype(np.float32))
 xm = jnp.asarray(np.random.default_rng(1).normal(0, 1, (6, 2, 8)).astype(np.float32))
 out = pipelined_apply(lambda p, v: jnp.tanh(v @ p), mesh, "stage", w, xm)

@@ -4,7 +4,13 @@ Bounds mirror I-BERT's published approximation errors: i-exp <= ~3e-3,
 i-GELU <= ~2e-2 absolute, i-softmax rows sum to 1 within quant resolution.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback draws (see detshim.py)
+    from detshim import given, settings
+    import detshim as st
 
 import jax.numpy as jnp
 
@@ -87,6 +93,50 @@ def test_i_layernorm_error(rows, h, seed):
     # int8 input quantization dominates the error budget
     assert np.abs(y - ref).max() < 0.15
     assert np.abs(y - ref).mean() < 0.04
+
+
+# -- deterministic cases (run with or without hypothesis) --------------------
+
+
+@pytest.mark.parametrize("n", [0, 1, 2, 3, 15, 16, 10 ** 6, 2 ** 31 - 1])
+def test_i_sqrt_exact_values(n):
+    got = int(iops.i_sqrt(jnp.asarray([n], jnp.int32))[0])
+    assert abs(got - int(np.sqrt(n))) <= 1
+
+
+def test_i_exp_fixed_grid():
+    x = np.linspace(-30.0, 0.0, 64).astype(np.float32)
+    q = quantize(jnp.asarray(x), scale=jnp.float32(30.0 / iops.ACT_QMAX),
+                 bits=iops.ACT_BITS)
+    qe, se = iops.i_exp(q.values.astype(jnp.int32), q.scale)
+    approx = np.asarray(qe, np.float64) * float(se)
+    exact = np.exp(np.asarray(q.values, np.float64) * float(q.scale))
+    assert np.all(np.asarray(qe) >= 0)
+    assert np.abs(approx - exact).max() < 5e-3 + float(q.scale)
+
+
+def test_i_softmax_fixed_rows():
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 4.0, (4, 48)).astype(np.float32)
+    q = quantize(jnp.asarray(x), bits=iops.ACT_BITS)
+    qp, sp = iops.i_softmax(q.values.astype(jnp.int32), q.scale)
+    p = np.asarray(qp) * float(sp)
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=2e-2)
+    ref = np.asarray(iops.f_softmax(jnp.asarray(x)))
+    assert np.abs(p - ref).max() < 0.02
+
+
+def test_i_layernorm_fixed_case():
+    rng = np.random.default_rng(11)
+    x = rng.normal(0, 2, (4, 768)).astype(np.float32)
+    gamma = rng.uniform(0.5, 1.5, 768).astype(np.float32)
+    beta = rng.normal(0, 0.2, 768).astype(np.float32)
+    q = quantize(jnp.asarray(x), bits=8)
+    prep = iops.layernorm_prepare(jnp.asarray(gamma), jnp.asarray(beta))
+    qy, sy = iops.i_layernorm(q.values.astype(jnp.int32), prep)
+    y = np.asarray(qy) * float(sy)
+    ref = np.asarray(iops.f_layernorm(jnp.asarray(x), gamma, beta))
+    assert np.abs(y - ref).max() < 0.15
 
 
 def test_i_gelu_monotone_region():

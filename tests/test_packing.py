@@ -1,6 +1,11 @@
 """No-padding packing invariants (paper §7.1), incl. hypothesis properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback draws (see detshim.py)
+    from detshim import given, settings
+    import detshim as st
 
 from repro.core.packing import bucket_len, pack_sequences, padded_batch
 

@@ -1,28 +1,49 @@
-"""Serving engine: batched greedy decode must equal unbatched forward."""
+"""Serving engines: wave baseline + slot-based continuous batching.
+
+Correctness bar: batched greedy decode equals the unbatched forward, the
+continuous engine's token streams are identical to the wave engine's, and
+the Cluster-Builder serve plan's shardings are actually applied to the
+engine's params and persistent slot cache.
+"""
 import numpy as np
 import pytest
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 
 from repro.configs import get_config
+from repro.core.packing import AdmissionPolicy
 from repro.models.transformer import init_params, make_model
-from repro.serving.engine import Request, ServingEngine
+from repro.runtime.stragglers import AdmissionDeadline
+from repro.serving.engine import (
+    ContinuousBatchingEngine, Request, ServingEngine, WaveEngine,
+)
 
 
-@pytest.mark.parametrize("arch", ["smollm-135m", "recurrentgemma-2b",
-                                  "xlstm-1.3b"])
-def test_batched_serving_matches_forward(arch):
+def _setup(arch="smollm-135m"):
     cfg = get_config(arch).reduced()
     model = make_model(cfg, remat=False)
     params = init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(model, params, max_batch=3, buckets=(16, 32))
+    return cfg, model, params
+
+
+def test_serving_engine_is_continuous():
+    assert ServingEngine is ContinuousBatchingEngine
+
+
+@pytest.mark.parametrize("engine_cls", [WaveEngine, ContinuousBatchingEngine])
+@pytest.mark.parametrize("arch", ["smollm-135m", "recurrentgemma-2b",
+                                  "xlstm-1.3b"])
+def test_batched_serving_matches_forward(arch, engine_cls):
+    cfg, model, params = _setup(arch)
+    eng = engine_cls(model, params, max_batch=3, buckets=(16, 32))
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
                for n in (5, 9, 12)]
     for i, p in enumerate(prompts):
         eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
-    done = eng.run()
+    done = sorted(eng.run(), key=lambda r: r.rid)
     assert len(done) == 3 and all(r.done for r in done)
 
     for r, p in zip(done, prompts):
@@ -36,11 +57,40 @@ def test_batched_serving_matches_forward(arch):
         assert exp == r.tokens_out, (r.rid, exp, r.tokens_out)
 
 
-def test_engine_multiple_waves_and_stats():
-    cfg = get_config("smollm-135m").reduced()
-    model = make_model(cfg, remat=False)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    eng = ServingEngine(model, params, max_batch=2, buckets=(16,))
+def test_continuous_matches_wave_token_streams():
+    """Same request set, mixed budgets spanning several admission cycles:
+    the slot engine's outputs must be identical to the wave engine's."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 14, 9, 3, 11, 7, 12, 6)]
+    budgets = [3, 8, 1, 6, 2, 7, 4, 5]
+
+    def reqs():
+        return [Request(rid=i, prompt=p, max_new_tokens=budgets[i])
+                for i, p in enumerate(prompts)]
+
+    wave = WaveEngine(model, params, max_batch=3, buckets=(16, 32))
+    for r in reqs():
+        wave.submit(r)
+    out_w = {r.rid: r.tokens_out for r in wave.run()}
+
+    cb = ContinuousBatchingEngine(model, params, max_batch=3,
+                                  buckets=(16, 32))
+    for r in reqs():
+        cb.submit(r)
+    done = cb.run()
+    out_c = {r.rid: r.tokens_out for r in done}
+    assert out_w == out_c
+    assert all(len(out_c[i]) == budgets[i] for i in range(len(budgets)))
+    # slot engine never idles a full table: fewer or equal decode steps
+    assert cb.stats["decode_steps"] <= wave.stats["decode_steps"]
+    assert cb.stats["admitted"] == cb.stats["completed"] == len(prompts)
+
+
+def test_wave_engine_stats_and_no_stale_tokens():
+    cfg, model, params = _setup()
+    eng = WaveEngine(model, params, max_batch=2, buckets=(16,))
     rng = np.random.default_rng(1)
     for i in range(5):
         eng.submit(Request(rid=i, prompt=rng.integers(
@@ -52,17 +102,164 @@ def test_engine_multiple_waves_and_stats():
     assert all(r.t_first_token >= r.t_enqueue for r in done)
 
 
-def test_eos_stops_request():
-    cfg = get_config("smollm-135m").reduced()
-    model = make_model(cfg, remat=False)
-    params = init_params(cfg, jax.random.PRNGKey(0))
+@pytest.mark.parametrize("engine_cls", [WaveEngine, ContinuousBatchingEngine])
+def test_duplicate_rids_are_served(engine_cls):
+    """rid is caller-chosen: Request equality must be identity, or the
+    scheduler's pending.remove trips on numpy-array comparison."""
+    cfg, model, params = _setup()
+    eng = engine_cls(model, params, max_batch=2, buckets=(16,))
+    rng = np.random.default_rng(5)
+    for _ in range(3):
+        eng.submit(Request(rid=0, prompt=rng.integers(
+            0, cfg.vocab_size, 5).astype(np.int32), max_new_tokens=2))
+    done = eng.run()
+    assert len(done) == 3 and all(r.done for r in done)
+
+
+def test_no_token_appended_after_done():
+    r = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=1)
+    r.append_token(5, now=1.0)
+    assert r.done and r.t_first_token == r.t_done == 1.0
+    with pytest.raises(AssertionError):
+        r.append_token(6, now=2.0)
+
+
+@pytest.mark.parametrize("engine_cls", [WaveEngine, ContinuousBatchingEngine])
+def test_eos_stops_request(engine_cls):
+    cfg, model, params = _setup()
     rng = np.random.default_rng(2)
     prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
     # find what the first generated token will be, then use it as EOS
     logits = model.forward_logits(params, tokens=jnp.asarray([prompt]))
     first = int(jnp.argmax(logits[0, -1]))
-    eng = ServingEngine(model, params, max_batch=1, buckets=(16,))
+    eng = engine_cls(model, params, max_batch=1, buckets=(16,))
     eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8, eos_id=first))
     done = eng.run()
-    assert done[0].tokens_out[0] == first
-    assert len(done[0].tokens_out) <= 2
+    assert done[0].tokens_out == [first]
+
+
+def test_request_budget_exceeding_slot_rejected():
+    cfg, model, params = _setup()
+    eng = ContinuousBatchingEngine(model, params, max_batch=1, buckets=(16,),
+                                   max_decode_len=8)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=np.zeros(12, np.int32),
+                           max_new_tokens=100))
+
+
+def test_serve_plan_shardings_applied():
+    """Acceptance: the engine runs under build_plan(..., mode="serve") and
+    its params + persistent slot cache carry the plan's NamedShardings."""
+    from repro.core.cluster_builder import build_plan
+    from repro.launch.mesh import make_mesh
+
+    cfg, model, params = _setup()
+    mesh = make_mesh((1, 1), ("data", "model"))
+    plan = build_plan(cfg, mesh, jax.eval_shape(lambda: params),
+                      mode="serve")
+    assert plan.mode == "serve"
+    eng = ContinuousBatchingEngine(model, params, max_batch=2,
+                                   buckets=(16,), plan=plan)
+    rng = np.random.default_rng(0)
+    eng.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 5).astype(np.int32), max_new_tokens=3))
+    done = eng.run()
+    assert done[0].done and len(done[0].tokens_out) == 3
+
+    # params placed under the plan's specs
+    def walk(specs, arrs):
+        if isinstance(specs, dict):
+            for k in specs:
+                walk(specs[k], arrs[k])
+        else:
+            assert isinstance(arrs.sharding, NamedSharding)
+            assert arrs.sharding.spec == specs, (specs, arrs.sharding.spec)
+
+    walk(plan.param_specs, eng.params)
+    # persistent slot cache placed under serve-mode cache specs
+    cache_specs = plan.specs_for_caches(
+        jax.eval_shape(lambda: eng._slot_caches), batch=eng.max_batch,
+        slot_table=True)
+    walk(cache_specs, eng._slot_caches)
+    # and outputs are unchanged by placement
+    rng = np.random.default_rng(0)
+    bare = ContinuousBatchingEngine(model, params, max_batch=2,
+                                    buckets=(16,))
+    bare.submit(Request(rid=0, prompt=rng.integers(
+        0, cfg.vocab_size, 5).astype(np.int32), max_new_tokens=3))
+    assert done[0].tokens_out == bare.run()[0].tokens_out
+
+
+def test_serve_mode_cache_spec_kv_head_tp():
+    """Serve-mode slot layout: k/v shard the kv-head dim over `model`,
+    never the slot or seq dims (inserts/writes must stay shard-local)."""
+    from repro.core.cluster_builder import build_plan
+    from repro.launch.mesh import make_abstract_mesh
+
+    cfg, model, _ = _setup()
+    mesh = make_abstract_mesh((2, 4), ("data", "model"))
+    caches_shape = jax.eval_shape(lambda: model.init_cache(8, 64))
+    plan = build_plan(cfg, mesh, None, caches_shape, batch=8, mode="serve")
+    slot_specs = plan.specs_for_caches(caches_shape, batch=8,
+                                       slot_table=True)
+
+    def walk(specs, shapes, path=(), slot_table=False):
+        if isinstance(specs, dict):
+            for k in specs:
+                walk(specs[k], shapes[k], path + (k,), slot_table)
+            return
+        name = path[-1]
+        off = 1 if "scan" in path else 0
+        if slot_table and len(specs) > off:
+            # inserts land at traced slot indices: slot dim never sharded
+            assert specs[off] is None, (path, specs)
+        if name in ("k", "v"):
+            # seq dim unsharded; kv-head dim on model iff divisible
+            assert specs[off + 1] is None
+            nkv = shapes.shape[off + 2]
+            if nkv % 4 == 0:
+                assert specs[off + 2] == "model"
+
+    walk(plan.cache_specs, caches_shape)
+    walk(slot_specs, caches_shape, slot_table=True)
+
+
+def test_admission_policy_deadline_and_warm_buckets():
+    policy = AdmissionPolicy(buckets=(16, 32), lane=8,
+                             deadline=AdmissionDeadline(0.05))
+
+    def req(rid, n, t):
+        return Request(rid=rid, prompt=np.zeros(n, np.int32), t_arrival=t)
+
+    # all young: warm buckets first, FIFO within
+    waiting = [req(0, 20, 0.0), req(1, 5, 0.0), req(2, 6, 0.0)]
+    order = policy.select(waiting, 3, warm=[16], now=0.01)
+    assert order == [1, 2, 0]  # len 5/6 -> warm bucket 16; len 20 -> cold 32
+    # an overdue request beats warm-bucket preference
+    waiting = [req(0, 20, 0.0), req(1, 5, 0.06)]
+    order = policy.select(waiting, 1, warm=[16], now=0.08)
+    assert order == [0]  # waited 80ms > deadline; jumps the warm len-5
+    # deadline_s=0 degenerates to strict FIFO
+    fifo = AdmissionPolicy(buckets=(16, 32), lane=8,
+                           deadline=AdmissionDeadline(0.0))
+    waiting = [req(0, 20, 0.0), req(1, 5, 0.0)]
+    assert fifo.select(waiting, 2, warm=[16], now=0.0) == [0, 1]
+
+
+def test_poisson_arrivals_pace_admission():
+    """Requests are admitted no earlier than their arrival offset."""
+    cfg, model, params = _setup()
+    eng = ContinuousBatchingEngine(model, params, max_batch=2, buckets=(16,))
+    rng = np.random.default_rng(4)
+    offsets = [0.0, 0.05, 0.30]
+    t0 = None
+    for i, dt in enumerate(offsets):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, 5).astype(np.int32), max_new_tokens=2,
+            t_arrival=dt))
+    import time
+    t0 = time.perf_counter()
+    done = eng.run()
+    assert len(done) == 3
+    for r, dt in zip(done, offsets):
+        assert r.t_admitted - t0 >= dt - 1e-3, (r.rid, r.t_admitted - t0, dt)

@@ -215,8 +215,9 @@ def bench_int8_kernels(state: Dict) -> None:
 
 def serve_cb(state: Dict) -> None:
     """§8.2 analogue: wave vs continuous-batching scheduling on a mixed
-    prompt-length / mixed decode-budget request stream (the regime where
-    batch-synchronous waves idle rows on the slowest member)."""
+    prompt-length / mixed decode-budget request stream, plus the fused
+    decode fast path (horizon-n `Model.decode_steps`) against the
+    one-dispatch-per-token scheduler (the PR 1 engine) at equal outputs."""
     import jax as _jax
     from repro.configs import get_config
     from repro.models.transformer import init_params, make_model
@@ -226,27 +227,62 @@ def serve_cb(state: Dict) -> None:
     cfg = get_config("smollm-135m").reduced()
     model = make_model(cfg, remat=False)
     params = init_params(cfg, _jax.random.PRNGKey(0))
+    # decode-bound budgets (the regime the fused path targets) on a hot
+    # Poisson ingress — the paper's line-rate feed, where waves also pay
+    # their deadline-batching idle time
     stream = poisson_requests(np.random.default_rng(0), 24, cfg.vocab_size,
-                              len_range=(4, 28), budgets=(2, 33))
+                              len_range=(4, 28), budgets=(32, 97), rate=400.0)
 
-    results = {}
-    for name, cls in (("wave", WaveEngine), ("cb", ContinuousBatchingEngine)):
-        eng = cls(model, params, max_batch=4, buckets=(16, 32))
+    results, metrics, streams = {}, {}, {}
+    setups = (
+        ("wave", WaveEngine, {}),
+        ("cb_step", ContinuousBatchingEngine, {"decode_horizon": 1}),
+        ("cb", ContinuousBatchingEngine, {}),
+    )
+    for name, cls, kw in setups:
+        eng = cls(model, params, max_batch=4, buckets=(16, 32),
+                  max_decode_len=96, **kw)
         replay(eng, stream, warmup=False)  # compile pass
         steps0 = eng.stats["decode_steps"]
+        disp0 = eng.stats["decode_dispatches"]
         passes = []  # median of 3 measured passes (CPU box is noisy)
         for _ in range(3):
             passes.append(replay(eng, stream, warmup=False))
         done, wall, tok_s, ttft = sorted(passes, key=lambda p: p[1])[1]
         results[name] = tok_s
+        streams[name] = {r.rid: tuple(r.tokens_out) for r in done}
         toks = sum(len(r.tokens_out) for r in done)
+        disp_tok = (eng.stats["decode_dispatches"] - disp0) / 3 / toks
+        metrics[name] = {
+            "tok_s": round(tok_s, 2),
+            "ttft_p50_ms": round(float(np.percentile(ttft, 50)), 3),
+            "ttft_p95_ms": round(float(np.percentile(ttft, 95)), 3),
+            "dispatches_per_token": round(disp_tok, 4),
+            "decode_horizon": eng.decode_horizon,
+        }
         row(f"serve_{name}_per_token", wall / toks * 1e6,
             f"{tok_s:.1f}tok/s ttft_p50={np.percentile(ttft, 50):.1f}ms "
-            f"ttft_p99={np.percentile(ttft, 99):.1f}ms "
+            f"ttft_p95={np.percentile(ttft, 95):.1f}ms "
+            f"disp/tok={disp_tok:.3f} "
             f"decode_steps={(eng.stats['decode_steps'] - steps0) // 3}")
+    assert streams["cb"] == streams["cb_step"], \
+        "fused horizon decode must be bit-identical to single-step"
     row("serve_cb_vs_wave_speedup", results["cb"] / results["wave"],
         "continuous-batching tok/s over wave tok/s (>=1 expected)")
+    fused_speedup = results["cb"] / results["cb_step"]
+    disp_drop = (metrics["cb_step"]["dispatches_per_token"]
+                 / max(metrics["cb"]["dispatches_per_token"], 1e-9))
+    row("serve_fused_vs_single_step_speedup", fused_speedup,
+        f"horizon-8 tok/s over one-dispatch-per-token (>=1.3 target), "
+        f"dispatches/token drop {disp_drop:.1f}x (>=4 target), "
+        "token streams bit-identical")
     state["serve_cb_speedup"] = results["cb"] / results["wave"]
+    state.setdefault("bench_json", {})["serve_cb"] = {
+        "engines": metrics,
+        "fused_vs_single_step_tok_s": round(fused_speedup, 3),
+        "dispatches_per_token_drop": round(disp_drop, 2),
+        "streams_bit_identical": True,
+    }
 
 
 BENCHES = {
@@ -270,8 +306,18 @@ _NEEDS = {"table2": ["table1"], "table3": ["table1"],
 
 
 def main(argv=None) -> None:
+    import json
     import sys
-    names = (argv if argv is not None else sys.argv[1:]) or _ORDER
+    args = list(argv if argv is not None else sys.argv[1:])
+    json_path = None
+    if "--json" in args:  # --json PATH: machine-readable perf trajectory
+        i = args.index("--json")
+        try:
+            json_path = args[i + 1]
+        except IndexError:
+            raise SystemExit("--json requires a file path")
+        del args[i:i + 2]
+    names = args or _ORDER
     unknown = [n for n in names if n not in BENCHES]
     if unknown:  # fail before running anything — compiles cost minutes
         raise SystemExit(
@@ -287,6 +333,11 @@ def main(argv=None) -> None:
             BENCHES[name](state)
             ran.add(name)
     print(f"\n{len(ROWS)} benchmark rows")
+    if json_path is not None:
+        payload = dict(state.get("bench_json", {}), rows=ROWS)
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
 
 
 if __name__ == "__main__":

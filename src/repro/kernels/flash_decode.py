@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: split-KV single-query flash attention (decode).
+
+Decode attention is the serving hot loop's memory-bound core: one query row
+per slot against the whole KV cache.  The dense jnp path materializes the
+(B, H, 1, S) score tensor in HBM and reads the GQA-expanded cache; this
+kernel streams the cache through VMEM once — HBM traffic = K + V + Q + O,
+with Q and O negligible (one row per head group).
+
+Grid: (batch, kv_heads, Sk/bs) with the KV-split axis innermost, so each
+(batch, kv head) pair walks its splits sequentially while the per-split
+(m, l, acc) partials stay resident in VMEM scratch; the final split runs the
+reduction epilogue (normalize by l, cast, write O).  All `q_per_kv` query
+heads of a KV group ride in one block — the group dim is the sublane axis,
+so GQA costs no extra cache reads.
+
+Masking is slot-metadata driven, matching the serving cache contract
+(models/attention.py):
+
+  * `kpos` carries each cache slot's absolute position; the never-written
+    sentinel (2^30) can never satisfy ``kpos <= qpos`` and is excluded by
+    the causal test — no separate validity plane needed;
+  * sliding windows test ``qpos - kpos < window`` against the same absolute
+    positions, so ring-buffer caches (slot = pos % window) need no unrolling;
+  * `active` gates whole rows: an inactive serving slot contributes an
+    all-masked row and the epilogue emits exact zeros (l == 0), never NaN.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BS = 256  # default KV split length (sublane dim of the k/v blocks)
+NEG_INF = -1e30
+KPOS_SENTINEL = 2 ** 30  # never-written cache slot (models/attention.py)
+
+
+def _kernel(qpos_ref, active_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, n_s: int, bs: int, window: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # (G, hd) — the kv group's query heads
+    k = k_ref[0, :, 0, :]  # (bs, hd)
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (G, bs)
+
+    qpos = qpos_ref[0, 0]
+    kpos = kpos_ref[0]  # (bs,) absolute positions; 2^30 = never written
+    msk = kpos[None, :] <= qpos  # causal; also rejects the sentinel
+    if window:
+        msk &= qpos - kpos[None, :] < window
+    msk &= active_ref[0, 0] != 0
+
+    s = jnp.where(msk, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    # p from the mask, not from s > threshold: a fully-masked split leaves
+    # m_new at NEG_INF and exp(s - m_new) would be exp(0) = 1 garbage
+    p = jnp.where(msk, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(j == n_s - 1)
+    def _epilogue():
+        # combine the split partials: normalize by the running l.  l == 0
+        # (inactive slot / fresh cache, every key masked) yields exact 0.
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "bs", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kpos: jax.Array, qpos: jax.Array, active: jax.Array, *,
+                 window: int = 0, bs: int = BS,
+                 interpret: bool = False) -> jax.Array:
+    """q: (B, KVH, G, hd) pre-scaled grouped queries; k/v: (B, Sk, KVH, hd).
+
+    kpos: (B, Sk) int32 absolute key positions (2^30 = never written);
+    qpos: (B, 1) int32 query position; active: (B, 1) int32 row gate.
+    Sk % bs == 0 (ops.py pads with the kpos sentinel).  Returns
+    (B, KVH, G, hd) in q.dtype.  ops.py handles layout, padding and GQA
+    head-group reshapes.
+    """
+    b, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    assert sk % bs == 0, (sk, bs)
+    n_s = sk // bs
+    grid = (b, kvh, n_s)
+    kern = functools.partial(_kernel, n_s=n_s, bs=bs, window=window)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0),
+                         memory_space=pltpu.SMEM),  # qpos
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0),
+                         memory_space=pltpu.SMEM),  # active
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bs, 1, hd), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bs), lambda b, h, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),   # running max m
+            pltpu.VMEM((g, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((g, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qpos, active, q, k, v, kpos)

@@ -26,10 +26,15 @@ _IMPL = None
 
 
 def default_impl() -> str:
-    """'pallas' on TPU, 'interpret' on CPU unless overridden."""
+    """'pallas' on TPU, 'interpret' on CPU unless overridden.
+
+    Interpret mode runs the *same kernel bodies* through the Pallas
+    interpreter, so CPU CI exercises the real kernels; the pure-jnp oracle
+    stays reachable via ``set_impl("ref")`` (or per-call ``impl="ref"``).
+    """
     global _IMPL
     if _IMPL is None:
-        _IMPL = "pallas" if jax.default_backend() == "tpu" else "ref"
+        _IMPL = "pallas" if jax.default_backend() == "tpu" else "interpret"
     return _IMPL
 
 
@@ -37,6 +42,23 @@ def set_impl(impl: str) -> None:
     global _IMPL
     assert impl in ("pallas", "interpret", "ref")
     _IMPL = impl
+
+
+# interpret mode replays the grid at trace time (one kernel-body trace per
+# program), so routing decisions must bound the grid: ~2ms/program means
+# 1024 keeps first-call latency under a few seconds for CPU CI while the
+# 32k dry-run cells (10^5+ programs) fall back to the jnp paths.
+INTERPRET_MAX_GRID = 1024
+
+
+def fused_grid_ok(impl: str, *dims: int) -> bool:
+    """Is a Pallas kernel with this grid routable under `impl`?"""
+    if impl == "pallas":
+        return True
+    n = 1
+    for d in dims:
+        n *= d
+    return n <= INTERPRET_MAX_GRID
 
 
 def _pad_to(x: jax.Array, mult, axis: int, value=0) -> jax.Array:
@@ -142,6 +164,50 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                               kv_len=s, interpret=impl == "interpret")
     out = out[:, :s].reshape(b, h, s, hd).transpose(0, 2, 1, 3)
     return out
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kpos: jax.Array, qpos: jax.Array,
+                 active: Optional[jax.Array] = None,
+                 window: int = 0, bs: Optional[int] = None,
+                 impl: Optional[str] = None) -> jax.Array:
+    """Split-KV single-query (decode) attention over a slot KV cache.
+
+    q: (B, H, hd) *pre-scaled* by 1/sqrt(hd) (both impls — unlike
+    `flash_attention`, whose kernel scales internally); k/v: (B, Sk, KVH,
+    hd); kpos: (B, Sk) int32 absolute positions (2^30 = never-written
+    sentinel); qpos: (B,) int32; active: optional (B,) bool slot gate;
+    window: sliding-window width (0 = none); bs: KV split length.
+    Returns (B, H, hd) in q.dtype.
+    """
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.flash_decode(q, k, v, kpos, qpos, active=active,
+                                 window=window)
+    from repro.kernels import flash_decode as _fd
+
+    b, h, hd = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    bs = bs or min(_fd.BS, _rup(sk, 8))
+    qg = q.reshape(b, kvh, g, hd)
+    gp = _rup(g, 8)  # group dim is the sublane axis: pad to tile granularity
+    if gp != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    pad = (-sk) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # pad keys carry the never-written sentinel: masked, not attended
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)),
+                       constant_values=_fd.KPOS_SENTINEL)
+    act = (jnp.ones((b, 1), jnp.int32) if active is None
+           else active.astype(jnp.int32).reshape(b, 1))
+    out = _fd.flash_decode(
+        qg, k, v, kpos.astype(jnp.int32),
+        qpos.astype(jnp.int32).reshape(b, 1), act,
+        window=window, bs=bs, interpret=impl == "interpret")
+    return out[:, :, :g].reshape(b, h, hd)
 
 
 def i_layernorm(q8: jax.Array, prep: LNParams, impl: Optional[str] = None):

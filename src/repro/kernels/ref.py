@@ -52,6 +52,37 @@ def i_gelu_elem(q: jax.Array, scale: jax.Array) -> jax.Array:
     return out
 
 
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 kpos: jax.Array, qpos: jax.Array,
+                 active: Optional[jax.Array] = None,
+                 window: int = 0) -> jax.Array:
+    """Single-query (decode) attention oracle for the split-KV kernel.
+
+    q: (B, H, hd) pre-scaled by 1/sqrt(hd); k/v: (B, Sk, KVH, hd) with
+    H = G * KVH (GQA — KV is never expanded); kpos: (B, Sk) int32 absolute
+    key positions where 2^30 marks never-written cache slots; qpos: (B,)
+    int32 absolute query position; active: optional (B,) bool row gate
+    (inactive rows return exact zeros); window: sliding-window width
+    (0 = unwindowed).  Masking is causal: ``kpos <= qpos`` — the sentinel
+    can never pass, so fresh cache slots are unreachable by construction.
+    """
+    b, h, hd = q.shape
+    kvh = k.shape[2]
+    q5 = q.reshape(b, kvh, h // kvh, hd)
+    s = jnp.einsum("bngd,bknd->bngk", q5, k).astype(jnp.float32)
+    msk = kpos[:, None] <= qpos[:, None, None]  # (B, 1, Sk)
+    if window:
+        msk &= qpos[:, None, None] - kpos[:, None] < window
+    if active is not None:
+        msk &= active[:, None, None]
+    msk = msk[:, :, None, :]  # (B, 1, 1, Sk) vs scores (B, KVH, G, Sk)
+    s = jnp.where(msk, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.any(msk, -1, keepdims=True), p, 0.0)
+    out = jnp.einsum("bngk,bknd->bngd", p.astype(q.dtype), v)
+    return out.reshape(b, h, hd)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True,
                     segment_ids: Optional[jax.Array] = None) -> jax.Array:

@@ -38,6 +38,9 @@ def main(argv=None):
     ap.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate (req/s); 0 = all at t=0")
     ap.add_argument("--engine", choices=["cb", "wave"], default="cb")
+    ap.add_argument("--decode-horizon", type=int, default=8,
+                    help="max fused decode steps per dispatch (1 = the "
+                         "one-dispatch-per-token baseline; docs/perf.md)")
     ap.add_argument("--no-plan", action="store_true",
                     help="skip Cluster-Builder placement (debug)")
     ap.add_argument("--seed", type=int, default=0)
@@ -57,7 +60,8 @@ def main(argv=None):
     monitor = StragglerMonitor()
     cls = ContinuousBatchingEngine if args.engine == "cb" else WaveEngine
     engine = cls(model, params, max_batch=args.max_batch,
-                 buckets=(16, 32, 64, 128), plan=plan, monitor=monitor)
+                 buckets=(16, 32, 64, 128), plan=plan, monitor=monitor,
+                 decode_horizon=args.decode_horizon)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()

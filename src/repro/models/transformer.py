@@ -80,13 +80,15 @@ def block_init(key, cfg: ModelConfig, pos_in_period: int) -> Params:
 
 
 def block_apply(cfg: ModelConfig, pos_in_period: int, p: Params, h: jax.Array,
-                positions: jax.Array, segment_ids, state):
+                positions: jax.Array, segment_ids, state,
+                pos_contiguous: bool = False):
     """Returns (h, new_state, aux_loss)."""
     kind = cfg.block_kind(pos_in_period)
     z = norm(h, p["norm1"], cfg)
     if kind == "attn":
         y, new_state = attn_mod.attention(z, p["mix"], cfg, positions,
-                                          segment_ids, cache=state)
+                                          segment_ids, cache=state,
+                                          pos_contiguous=pos_contiguous)
     else:
         # pads (pos sentinel 2^30 or segment -1) must not touch the state
         valid = positions < 2**29
@@ -189,8 +191,12 @@ class Model:
     # -- core --------------------------------------------------------------
 
     def backbone(self, params: Params, h: jax.Array, positions: jax.Array,
-                 segment_ids=None, caches=None):
-        """h: (B,S,D) embeddings -> (h_final, new_caches, aux)."""
+                 segment_ids=None, caches=None, pos_contiguous: bool = False):
+        """h: (B,S,D) embeddings -> (h_final, new_caches, aux).
+
+        pos_contiguous: positions are a plain broadcast arange (no pad
+        sentinels) — lets long-prefill attention take the Pallas fused path.
+        """
         cfg = self.cfg
         n_rep, tail, kinds = layer_plan(cfg)
         np_ = len(kinds)
@@ -201,7 +207,8 @@ class Model:
             for i in range(np_):
                 st = None if period_caches is None else period_caches[f"b{i}"]
                 h, ns, a = block_apply(cfg, i, period_params[f"b{i}"], h,
-                                       positions, segment_ids, st)
+                                       positions, segment_ids, st,
+                                       pos_contiguous=pos_contiguous)
                 if period_caches is not None:
                     new_caches[f"b{i}"] = ns
                 aux = aux + a
@@ -235,7 +242,8 @@ class Model:
         for t in range(tail):
             st = None if caches is None else caches["tail"][str(t)]
             h, ns, a = block_apply(cfg, t, params["tail"][str(t)], h,
-                                   positions, segment_ids, st)
+                                   positions, segment_ids, st,
+                                   pos_contiguous=pos_contiguous)
             if caches is not None:
                 new_tail[str(t)] = ns
             aux = aux + a
@@ -259,19 +267,23 @@ class Model:
         x = self.embed_inputs(params, tokens, embeds)
         b, s = x.shape[:2]
         positions = batch.get("positions")
+        contiguous = positions is None
         if positions is None:
             positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
         h, _, aux = self.backbone(params, x, positions,
-                                  batch.get("segment_ids"))
+                                  batch.get("segment_ids"),
+                                  pos_contiguous=contiguous)
         ce = cross_entropy_chunked(h, batch["labels"], params["embed"])
         return ce + 0.01 * aux
 
     def forward_logits(self, params, tokens=None, embeds=None, positions=None):
         x = self.embed_inputs(params, tokens, embeds)
         b, s = x.shape[:2]
+        contiguous = positions is None
         if positions is None:
             positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
-        h, _, _ = self.backbone(params, x, positions)
+        h, _, _ = self.backbone(params, x, positions,
+                                pos_contiguous=contiguous)
         return lm_head(h, params["embed"])
 
     def init_cache(self, batch: int, seq_len: int):
@@ -300,12 +312,14 @@ class Model:
         """
         x = self.embed_inputs(params, tokens, embeds)
         b, s = x.shape[:2]
+        contiguous = positions is None
         if positions is None:
             positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
         if last_idx is None:
             last_idx = jnp.full((b,), s - 1, jnp.int32)
         sub = {"scan": caches["scan"], "tail": caches["tail"]}
-        h, sub, _ = self.backbone(params, x, positions, caches=sub)
+        h, sub, _ = self.backbone(params, x, positions, caches=sub,
+                                  pos_contiguous=contiguous)
         bidx = jnp.arange(b)
         last_pos = positions[bidx, last_idx].astype(jnp.int32)
         caches = dict(sub, pos=last_pos + 1)
@@ -336,6 +350,53 @@ class Model:
                     _batch_broadcast(active, ax, new.ndim), new, old),
                 new_caches, caches)
         return lm_head(h[:, -1:], params["embed"])[:, 0], new_caches
+
+    def decode_steps(self, params, caches, token: jax.Array,
+                     active: jax.Array, n: int,
+                     eos_id: Optional[jax.Array] = None,
+                     budget: Optional[jax.Array] = None,
+                     pad_token: int = 0):
+        """n fused greedy decode steps as one on-device ``lax.scan``.
+
+        The serving fast path: instead of one jit dispatch + one (B, V)
+        logits fetch + a host argmax per generated token, the whole hot loop
+        (decode_step -> greedy argmax -> feed back) runs on the accelerator
+        and the host fetches a single (n, B) int32 token block per dispatch.
+
+        token: (B,) int32 current input tokens; active: (B,) bool slot mask;
+        eos_id: optional (B,) int32 per-slot EOS (-1 = never); budget:
+        optional (B,) int32 tokens each slot may still emit.  A slot
+        early-exits on device — its ``active`` lane drops after it emits EOS
+        or exhausts its budget, and from then on it emits -1 and (like any
+        inactive slot) leaves its cache rows and position counter untouched,
+        so the token streams are bit-identical to n chained ``decode_step``
+        calls reconciled on the host.
+
+        Returns (tokens (n, B) int32 with -1 for inactive lanes, next token
+        (B,), active (B,), remaining budget (B,), caches).
+        """
+        b = token.shape[0]
+        if eos_id is None:
+            eos_id = jnp.full((b,), -1, jnp.int32)
+        if budget is None:
+            budget = jnp.full((b,), 2 ** 30, jnp.int32)
+
+        def step(carry, _):
+            cur, act, rem, caches = carry
+            logits, caches = self.decode_step(params, caches, cur,
+                                              active=act)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            emit = jnp.where(act, nxt, -1)
+            rem = jnp.where(act, rem - 1, rem)
+            still = act & (nxt != eos_id) & (rem > 0)
+            # finished/free lanes feed the pad token, never a stale sample
+            cur = jnp.where(still, nxt, pad_token).astype(jnp.int32)
+            return (cur, still, rem, caches), emit
+
+        (cur, act, rem, caches), toks = jax.lax.scan(
+            step, (token.astype(jnp.int32), active, budget, caches), None,
+            length=n)
+        return toks, cur, act, rem, caches
 
     def insert_prefill_cache(self, big, small, slot: jax.Array):
         """Write batch-1 prefill caches `small` into row `slot` of the

@@ -19,9 +19,22 @@ waiting for a "wave" to fill.  The engine mirrors that with *slots*:
     prefill/decode are jitted with `in_shardings`/`out_shardings` — the
     engine is the runtime consumer of the Cluster Builder's serve plan.
 
+Decode runs on a *horizon*: each dispatch is a fused on-device loop
+(`Model.decode_steps` — decode, greedy argmax, feed back, EOS/budget lane
+masking, all under one jit) of up to `decode_horizon` steps, and the host
+fetches one (n, B) int32 token block instead of one (B, V) logits array per
+token.  The horizon is picked adaptively from admission pressure: with
+waiting requests it stops at the next predicted completion so a slot frees
+at the earliest boundary; with a drained queue it runs long.  Admissions
+and completions are reconciled only at horizon boundaries; between them
+the decode state (current token, active lanes, budgets) never leaves the
+device.  `decode_horizon=1` reproduces the one-dispatch-per-token
+scheduler and is the measured baseline in `benchmarks/run.py serve_cb`.
+
 `WaveEngine` keeps the seed's batch-synchronous scheduler (one batched
 prefill, decode to the slowest request) as the measured baseline for the
-`benchmarks/run.py serve_cb` comparison.
+`benchmarks/run.py serve_cb` comparison; its inner loop rides the same
+fused horizon programs.
 """
 from __future__ import annotations
 
@@ -73,6 +86,7 @@ class EngineBase:
                  buckets=(32, 64, 128, 256), greedy: bool = True,
                  deadline_s: float = 0.05, plan=None,
                  max_decode_len: int = 64,
+                 decode_horizon: int = 8,
                  monitor: Optional[StragglerMonitor] = None):
         self.model = model
         self.max_batch = max_batch
@@ -87,11 +101,25 @@ class EngineBase:
         # program compiles exactly once per engine
         self.cache_len = bucket_len(max(self.buckets), self.buckets,
                                     lane=8) + max_decode_len
+        # decode-horizon ladder: each fused dispatch runs up to
+        # `decode_horizon` on-device decode steps (Model.decode_steps) and
+        # ships one (n, B) token block back; powers of two bound the number
+        # of compiled horizon programs.  decode_horizon=1 is the measured
+        # one-dispatch-per-token baseline (docs/perf.md).
+        assert decode_horizon >= 1
+        self.decode_horizon = decode_horizon
+        self._horizons = [h for h in (1, 2, 4, 8, 16, 32, 64, 128)
+                          if h <= decode_horizon] or [1]
         self._queue: List[Request] = []
         self._jit_prefill: Dict = {}
-        self._jit_decode: Optional[Callable] = None
+        self._jit_decode_steps: Dict[int, Callable] = {}
         self._jit_insert: Optional[Callable] = None
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0}
+        self._jit_admit_lane: Optional[Callable] = None
+        # decode_steps: on-device scan steps; decode_dispatches: fused jit
+        # calls; device_syncs: host<->device round-trips (token-block and
+        # first-token fetches) — the quantity the horizon amortizes
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
+                      "decode_dispatches": 0, "device_syncs": 0}
 
         self._param_shardings = None
         self._cache_shardings = None
@@ -141,22 +169,78 @@ class EngineBase:
             self._jit_prefill[key] = jax.jit(fn, **kw)
         return self._jit_prefill[key]
 
-    def _decode_fn(self):
-        if self._jit_decode is None:
+    def _decode_steps_fn(self, n: int):
+        """Fused n-step decode program (compiled once per horizon length;
+        jax.jit re-specializes per batch shape for the wave engine's
+        variable waves)."""
+        if n not in self._jit_decode_steps:
             model = self.model
 
-            def fn(params, caches, token, active):
-                return model.decode_step(params, caches, token,
-                                         active=active)
+            def fn(params, caches, token, active, eos, budget):
+                return model.decode_steps(params, caches, token, active, n,
+                                          eos_id=eos, budget=budget,
+                                          pad_token=PAD_TOKEN)
 
             kw = {}
             if self.plan is not None:
                 kw["in_shardings"] = (self._param_shardings,
                                       self._cache_shardings, self._rep,
-                                      self._rep)
-                kw["out_shardings"] = (self._rep, self._cache_shardings)
-            self._jit_decode = jax.jit(fn, donate_argnums=(1,), **kw)
-        return self._jit_decode
+                                      self._rep, self._rep, self._rep)
+                kw["out_shardings"] = (self._rep, self._rep, self._rep,
+                                       self._rep, self._cache_shardings)
+            self._jit_decode_steps[n] = jax.jit(fn, donate_argnums=(1,),
+                                                **kw)
+        return self._jit_decode_steps[n]
+
+    def _admit_lane_fn(self):
+        """One fused update of the device decode state for an admission
+        (four eager .at[].set dispatches cost ~4x this on small hosts)."""
+        if self._jit_admit_lane is None:
+
+            def fn(cur, active, eos, budget, sl, tok, eos_id, bud):
+                return (cur.at[sl].set(tok), active.at[sl].set(True),
+                        eos.at[sl].set(eos_id), budget.at[sl].set(bud))
+
+            self._jit_admit_lane = jax.jit(fn, donate_argnums=(0, 1, 2, 3))
+        return self._jit_admit_lane
+
+    def _pick_horizon(self, waiting: bool, remaining: List[int]) -> int:
+        """Adaptive decode horizon from admission pressure.
+
+        With `waiting` requests, aim for the next *predicted* completion
+        (min remaining budget) so a slot frees — and is refilled — at the
+        earliest useful horizon boundary, floored at 4 steps so dispatch
+        overhead stays amortized (a completion can overshoot by at most 3
+        masked slot-steps); with a drained queue run up to the longest
+        remaining budget.  EOS can still end a lane mid-horizon; those
+        lanes decode masked until the boundary (wasted slot-steps, never
+        wrong tokens)."""
+        if waiting:
+            target = max(min(remaining), min(4, self.decode_horizon))
+        else:
+            target = max(remaining)
+        n = 1
+        for h in self._horizons:
+            if h <= max(1, target):
+                n = h
+        return n
+
+    def _append_block(self, block: np.ndarray, requests, now: float) -> None:
+        """Reconcile one fetched (n, B) token block into request streams.
+
+        -1 marks a lane that was inactive at that step (free slot, or
+        early-exited on device after EOS/budget); device-side masking
+        mirrors `Request.append_token`'s done rule, so the host simply
+        appends until its own done flag flips."""
+        for i, r in enumerate(requests):
+            if r is None or r.done:
+                continue
+            for tok in block[:, i]:
+                if tok < 0:
+                    break
+                r.append_token(int(tok), now)
+                if r.done:
+                    break
 
     def _prefill_batch(self, wave: List[Request], batch: int,
                        bucket_cache: bool = False):
@@ -186,6 +270,7 @@ class EngineBase:
             jnp.asarray(lengths))
 
     def _greedy_next(self, logits) -> np.ndarray:
+        self.stats["device_syncs"] += 1
         return np.asarray(jnp.argmax(logits, -1), np.int32)
 
 
@@ -250,12 +335,17 @@ class ContinuousBatchingEngine(EngineBase):
         # so an abnormal exit (interrupt, OOM) re-allocates on the next run
         # instead of poisoning the engine; restored on normal completion.
         self._slot_caches = None
-        decode = self._decode_fn()
         done: List[Request] = []
         pending = self._queue
         self._queue = []
         slots: List[Optional[Request]] = [None] * self.max_batch
-        cur = np.full((self.max_batch,), PAD_TOKEN, np.int32)
+        # decode state lives on device between horizon boundaries; the host
+        # only touches it on admission events (completions deactivate their
+        # lane on device, inside the fused loop)
+        cur = jnp.full((self.max_batch,), PAD_TOKEN, jnp.int32)
+        active = jnp.zeros((self.max_batch,), bool)
+        eos = jnp.full((self.max_batch,), -1, jnp.int32)
+        budget = jnp.zeros((self.max_batch,), jnp.int32)
         t0 = time.perf_counter()
         for r in pending:  # latency clocks start at simulated arrival
             r.t_enqueue = max(r.t_enqueue, t0 + r.t_arrival)
@@ -282,7 +372,9 @@ class ContinuousBatchingEngine(EngineBase):
                         self.stats["completed"] += 1
                     else:
                         slots[sl] = r
-                        cur[sl] = tok
+                        cur, active, eos, budget = self._admit_lane_fn()(
+                            cur, active, eos, budget, sl, tok, r.eos_id,
+                            r.max_new_tokens - len(r.tokens_out))
             if not any(r is not None for r in slots):
                 if pending:  # idle until the next arrival
                     wait = min(r.t_arrival for r in pending) \
@@ -291,27 +383,26 @@ class ContinuousBatchingEngine(EngineBase):
                         time.sleep(min(wait, 0.005))
                 continue
 
-            active = np.array([r is not None for r in slots])
+            n = self._pick_horizon(
+                bool(pending),
+                [r.max_new_tokens - len(r.tokens_out)
+                 for r in slots if r is not None])
             t_step = time.perf_counter()
-            logits, caches = decode(self.params, caches, jnp.asarray(cur),
-                                    jnp.asarray(active))
-            nxt = self._greedy_next(logits)
-            self.stats["decode_steps"] += 1
+            toks, cur, active, budget, caches = self._decode_steps_fn(n)(
+                self.params, caches, cur, active, eos, budget)
+            block = np.asarray(toks)  # the only per-dispatch device sync
+            self.stats["decode_dispatches"] += 1
+            self.stats["decode_steps"] += n
+            self.stats["device_syncs"] += 1
             if self.monitor is not None:
                 self.monitor.observe(self.stats["decode_steps"],
-                                     time.perf_counter() - t_step)
-            t_now = time.perf_counter()
+                                     (time.perf_counter() - t_step) / n)
+            self._append_block(block, slots, time.perf_counter())
             for i, r in enumerate(slots):
-                if r is None:
-                    continue
-                r.append_token(int(nxt[i]), t_now)
-                if r.done:
+                if r is not None and r.done:
                     done.append(r)
-                    slots[i] = None
-                    cur[i] = PAD_TOKEN  # freed slot feeds pad, not stale tok
+                    slots[i] = None  # device lane already inactive
                     self.stats["completed"] += 1
-                else:
-                    cur[i] = int(nxt[i])
 
         self._slot_caches = caches
         return sorted(done, key=lambda r: r.rid)
@@ -367,35 +458,34 @@ class WaveEngine(EngineBase):
         self.stats["waves"] += 1
         b = len(wave)
         logits, caches = self._prefill_batch(wave, b)
-        decode = self._decode_fn()
-        cur = np.full((b,), PAD_TOKEN, np.int32)
         nxt = self._greedy_next(logits)
         now = time.perf_counter()
         for i, r in enumerate(wave):
             r.append_token(int(nxt[i]), now)
-            if not r.done:
-                cur[i] = int(nxt[i])
+        # decode state moves to device once per wave; the fused horizon
+        # loop feeds tokens back on device and ships (n, b) blocks out
+        cur = jnp.asarray([PAD_TOKEN if r.done else r.tokens_out[-1]
+                           for r in wave], jnp.int32)
+        active = jnp.asarray([not r.done for r in wave])
+        eos = jnp.asarray([r.eos_id for r in wave], jnp.int32)
+        budget = jnp.asarray([r.max_new_tokens - len(r.tokens_out)
+                              for r in wave], jnp.int32)
 
-        budget = max(r.max_new_tokens for r in wave)
-        for _ in range(budget - 1):
-            if all(r.done for r in wave):
-                break
-            active = np.array([not r.done for r in wave])
+        while not all(r.done for r in wave):
+            n = self._pick_horizon(
+                False, [r.max_new_tokens - len(r.tokens_out)
+                        for r in wave if not r.done])
             t_step = time.perf_counter()
-            logits, caches = decode(self.params, caches, jnp.asarray(cur),
-                                    jnp.asarray(active))
-            self.stats["decode_steps"] += 1
+            toks, cur, active, budget, caches = self._decode_steps_fn(n)(
+                self.params, caches, cur, active, eos, budget)
+            block = np.asarray(toks)
+            self.stats["decode_dispatches"] += 1
+            self.stats["decode_steps"] += n
+            self.stats["device_syncs"] += 1
             if self.monitor is not None:
                 self.monitor.observe(self.stats["decode_steps"],
-                                     time.perf_counter() - t_step)
-            nxt = self._greedy_next(logits)
-            now = time.perf_counter()
-            for i, r in enumerate(wave):
-                if r.done:
-                    cur[i] = PAD_TOKEN
-                    continue
-                r.append_token(int(nxt[i]), now)
-                cur[i] = PAD_TOKEN if r.done else int(nxt[i])
+                                     (time.perf_counter() - t_step) / n)
+            self._append_block(block, wave, time.perf_counter())
         return wave
 
 

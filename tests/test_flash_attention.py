@@ -50,6 +50,55 @@ def test_flash_bf16():
                                atol=3e-2, rtol=3e-2)
 
 
+def test_long_prefill_routes_through_fused_kernel(monkeypatch):
+    """attention() routes contiguous long prefill through ops.flash_attention
+    (impl-gated) and the result tracks the chunked jax formulation; padded
+    positions or segment ids must keep the ref/chunked fallback."""
+    from repro.models import attention as am
+    from repro.models.attention import attn_init, attention
+    from repro.configs import get_config
+
+    cfg = get_config("smollm-135m").reduced()
+    p = attn_init(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 128
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (b, s, cfg.d_model)),
+                    jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    monkeypatch.setattr(am, "DENSE_ATTN_MAX_KV", 32)  # force the long path
+    calls = []
+    real = ops.flash_attention
+
+    def spy(*a, **kw):
+        calls.append(kw.get("impl"))
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "flash_attention", spy)
+    prev = ops._IMPL
+    try:
+        ops.set_impl("interpret")
+        fused, _ = attention(x, p, cfg, pos, pos_contiguous=True)
+        assert calls, "fused prefill kernel was not routed to"
+        # non-contiguous positions (pad sentinels) must not take the kernel
+        n = len(calls)
+        attention(x, p, cfg, pos, pos_contiguous=False)
+        assert len(calls) == n
+        # interpret mode replays the grid at trace time: an over-budget
+        # grid (b*h * ceil(S/256)^2 > INTERPRET_MAX_GRID) must fall back
+        big_s = 2048  # 16*4 heads-batch * 8^2 splits = 4096 programs
+        xb = jnp.zeros((16, big_s, cfg.d_model), jnp.bfloat16)
+        pb = jnp.broadcast_to(jnp.arange(big_s, dtype=jnp.int32),
+                              (16, big_s))
+        attention(xb, p, cfg, pb, pos_contiguous=True)
+        assert len(calls) == n
+        ops.set_impl("ref")
+        chunked, _ = attention(x, p, cfg, pos, pos_contiguous=True)
+    finally:
+        ops._IMPL = prev
+    np.testing.assert_allclose(np.asarray(fused, np.float32),
+                               np.asarray(chunked, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
 def test_flash_matches_model_attention_path():
     """Cross-check against the model's chunked online-softmax (the jax
     formulation the dry-run lowers) — all three agree."""

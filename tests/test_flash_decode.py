@@ -1,0 +1,179 @@
+"""Split-KV flash-decode kernel vs jnp oracle + fused multi-step decode.
+
+Kernel bar: interpret-mode (real Pallas body) vs ref-oracle equality across
+GQA ratios, KV split counts, sliding windows, kpos-sentinel rows and active
+masks.  Model bar: `decode_steps(n=k)` token streams are bit-identical to k
+chained `decode_step` calls (the engine acceptance invariant), under both
+the oracle and the kernel impls.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+SENTINEL = 2 ** 30
+
+
+def _mk(b, h, kvh, hd, s, seed=0, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 1, (b, h, hd)), dtype) * (hd ** -0.5)
+    k = jnp.asarray(rng.normal(0, 1, (b, s, kvh, hd)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (b, s, kvh, hd)), dtype)
+    kpos = jnp.asarray(np.tile(np.arange(s), (b, 1)), jnp.int32)
+    qpos = jnp.asarray(rng.integers(s // 2, s, b), jnp.int32)
+    return q, k, v, kpos, qpos
+
+
+def _both(q, k, v, kpos, qpos, **kw):
+    got = ops.flash_decode(q, k, v, kpos, qpos, impl="interpret", **kw)
+    kw.pop("bs", None)
+    want = ops.flash_decode(q, k, v, kpos, qpos, impl="ref", **kw)
+    return np.asarray(got), np.asarray(want)
+
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (6, 1), (9, 3)])
+def test_flash_decode_gqa_ratios(h, kvh):
+    q, k, v, kpos, qpos = _mk(2, h, kvh, 16, 64, seed=h)
+    got, want = _both(q, k, v, kpos, qpos)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("s,bs", [(33, 8), (64, 16), (256, 64), (96, 96)])
+def test_flash_decode_split_counts(s, bs):
+    """Multi-split online-softmax partials == one-shot softmax oracle."""
+    q, k, v, kpos, qpos = _mk(2, 4, 2, 16, s, seed=s)
+    got, want = _both(q, k, v, kpos, qpos, bs=bs)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [8, 16, 40])
+def test_flash_decode_sliding_window(window):
+    q, k, v, kpos, qpos = _mk(3, 4, 2, 16, 48, seed=window)
+    got, want = _both(q, k, v, kpos, qpos, window=window, bs=16)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_ring_buffer_positions():
+    """Window cache as the serving ring buffer: kpos is absolute position
+    at slot = pos % window, exactly as models/attention.py writes it."""
+    window, s = 16, 16
+    q, k, v, _, _ = _mk(2, 4, 2, 16, s, seed=9)
+    qpos = jnp.asarray([20, 7], jnp.int32)
+    kpos = jnp.stack([20 - ((20 - jnp.arange(s)) % s),
+                      jnp.where(jnp.arange(s) <= 7, jnp.arange(s),
+                                SENTINEL)]).astype(jnp.int32)
+    got, want = _both(q, k, v, kpos, qpos, window=window, bs=8)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_decode_kpos_sentinel_rows():
+    """Never-written slots (2^30) are unreachable; a fully-sentinel row
+    (fresh slot) yields exact zeros, not NaN."""
+    q, k, v, kpos, qpos = _mk(3, 4, 2, 16, 32, seed=3)
+    kpos = kpos.at[0, 10:].set(SENTINEL)
+    kpos = kpos.at[1].set(SENTINEL)
+    got, want = _both(q, k, v, kpos, qpos, bs=8)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+    assert not np.isnan(got).any()
+    np.testing.assert_array_equal(got[1], 0.0)
+
+
+def test_flash_decode_active_mask():
+    """Inactive slots produce exact zeros in both impls; active rows are
+    untouched by their neighbours' masking."""
+    q, k, v, kpos, qpos = _mk(4, 4, 2, 16, 32, seed=5)
+    active = jnp.asarray([True, False, True, False])
+    got, want = _both(q, k, v, kpos, qpos, active=active, bs=8)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+    np.testing.assert_array_equal(got[1], 0.0)
+    np.testing.assert_array_equal(got[3], 0.0)
+    all_on, _ = _both(q, k, v, kpos, qpos, bs=8)
+    np.testing.assert_array_equal(got[0], all_on[0])
+
+
+def test_flash_decode_bf16():
+    q, k, v, kpos, qpos = _mk(2, 4, 2, 32, 64, seed=11, dtype=jnp.bfloat16)
+    got, want = _both(q, k, v, kpos, qpos, bs=16)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_flash_decode_matches_dense_decode_path():
+    """Cross-check against the model's masked dense decode formulation."""
+    from repro.models import attention as am
+
+    b, s, h, kvh, hd = 2, 40, 4, 2, 16
+    q, k, v, kpos, qpos = _mk(b, h, kvh, hd, s, seed=13)
+    msk = am._mask(1, s, qpos[:, None], kpos, True, 0)
+    dense = am._dense_attention(q[:, None], k, v, msk)[:, 0]
+    got = ops.flash_decode(q, k, v, kpos, qpos, impl="interpret", bs=8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-step decode (Model.decode_steps)
+# ---------------------------------------------------------------------------
+
+
+def _model_setup(arch="smollm-135m"):
+    from repro.configs import get_config
+    from repro.models.transformer import init_params, make_model
+
+    cfg = get_config(arch).reduced()
+    model = make_model(cfg, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("arch", ["smollm-135m", "recurrentgemma-2b"])
+def test_decode_steps_equals_chained_decode_step(arch, impl):
+    """decode_steps(n=k) == k chained decode_step calls, bit-identical,
+    including mid-scan EOS and budget early-exit masking."""
+    from repro.kernels import ops as kops
+
+    prev = kops._IMPL
+    kops.set_impl(impl)
+    try:
+        cfg, model, params = _model_setup(arch)
+        b, k = 3, 6
+        rng = np.random.default_rng(17)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 5)),
+                           jnp.int32)
+        caches = model.init_cache(b, 32)
+        logits, caches = model.prefill(params, caches, tokens=toks)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        active = jnp.asarray([True, True, False])
+        budget = jnp.asarray([k, 3, k], jnp.int32)  # lane 1 exits mid-scan
+        eos = jnp.full((b,), -1, jnp.int32)
+
+        fused, cur_f, act_f, rem_f, _ = model.decode_steps(
+            params, caches, cur, active, k, eos_id=eos, budget=budget)
+
+        # chained reference with identical host-side masking
+        c, a, r = cur, active, budget
+        chain = []
+        for _ in range(k):
+            lg, caches = model.decode_step(params, caches, c, active=a)
+            nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+            chain.append(np.where(np.asarray(a), np.asarray(nxt), -1))
+            r = jnp.where(a, r - 1, r)
+            a = a & (nxt != eos) & (r > 0)
+            c = jnp.where(a, nxt, 0).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(fused), np.stack(chain))
+        np.testing.assert_array_equal(np.asarray(cur_f), np.asarray(c))
+        np.testing.assert_array_equal(np.asarray(act_f), np.asarray(a))
+        np.testing.assert_array_equal(np.asarray(rem_f), np.asarray(r))
+        # lane 1 emitted exactly its budget then went dark
+        col = np.asarray(fused)[:, 1]
+        assert (col[:3] >= 0).all() and (col[3:] == -1).all()
+        # inactive lane 2 never emitted
+        assert (np.asarray(fused)[:, 2] == -1).all()
+    finally:
+        kops._IMPL = prev

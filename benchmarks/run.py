@@ -217,7 +217,13 @@ def serve_cb(state: Dict) -> None:
     """§8.2 analogue: wave vs continuous-batching scheduling on a mixed
     prompt-length / mixed decode-budget request stream, plus the fused
     decode fast path (horizon-n `Model.decode_steps`) against the
-    one-dispatch-per-token scheduler (the PR 1 engine) at equal outputs."""
+    one-dispatch-per-token scheduler (the PR 1 engine) at equal outputs.
+
+    All engines run *dense slot* caches here so the comparison isolates
+    scheduling (waves vs slots vs horizon) exactly as before the paged
+    pool landed — the paged-vs-dense measurement is `serve_paged`
+    (`--shared-prefix`), which pins one impl for its stream-equality
+    assertion."""
     import jax as _jax
     from repro.configs import get_config
     from repro.models.transformer import init_params, make_model
@@ -236,8 +242,9 @@ def serve_cb(state: Dict) -> None:
     results, metrics, streams = {}, {}, {}
     setups = (
         ("wave", WaveEngine, {}),
-        ("cb_step", ContinuousBatchingEngine, {"decode_horizon": 1}),
-        ("cb", ContinuousBatchingEngine, {}),
+        ("cb_step", ContinuousBatchingEngine,
+         {"decode_horizon": 1, "paged": False}),
+        ("cb", ContinuousBatchingEngine, {"paged": False}),
     )
     for name, cls, kw in setups:
         eng = cls(model, params, max_batch=4, buckets=(16, 32),
@@ -285,6 +292,102 @@ def serve_cb(state: Dict) -> None:
     }
 
 
+def serve_paged(state: Dict) -> None:
+    """The `--shared-prefix` workload: paged KV + radix prefix reuse vs the
+    dense-slot engine at *equal KV HBM* on a shared-system-prompt stream
+    (`serving/stream.shared_prefix_requests`).
+
+    The dense engine reserves a worst-case slot row per lane, so a fixed KV
+    budget caps it at `dense_batch` lanes; the paged engine spends the same
+    bytes as a page pool, where prefix sharing + actual-length allocation
+    fit ~2x the lanes, and prefix-hit admissions skip prefill entirely.
+    Streams must be bit-identical (one pinned impl, and the forced-token
+    suffix ingest writes exactly the KV a cold prefill would)."""
+    import jax as _jax
+    from repro.configs import get_config
+    from repro.kernels import ops as kops
+    from repro.models.transformer import init_params, make_model
+    from repro.serving.engine import ContinuousBatchingEngine
+    from repro.serving.stream import replay, shared_prefix_requests
+
+    cfg = get_config("smollm-135m").reduced()
+    model = make_model(cfg, remat=False)
+    params = init_params(cfg, _jax.random.PRNGKey(0))
+    stream = shared_prefix_requests(np.random.default_rng(0), 24,
+                                    cfg.vocab_size, prefix_len=48,
+                                    suffix_range=(3, 9), budgets=(16, 48),
+                                    rate=300.0)
+    page_size = 16
+    dense_batch = 4
+    buckets, max_decode = (64,), 96
+    kv_rows = dense_batch * (max(buckets) + max_decode)  # dense KV budget
+    setups = (
+        ("dense_slots", dict(paged=False, max_batch=dense_batch)),
+        # same KV bytes, spent as a shared page pool: 2x the lanes
+        ("paged", dict(max_batch=2 * dense_batch, page_size=page_size,
+                       num_pages=kv_rows // page_size + 1)),
+    )
+    metrics, streams = {}, {}
+    prev_impl = kops._IMPL
+    kops.set_impl("ref")
+    try:
+        for name, kw in setups:
+            eng = ContinuousBatchingEngine(
+                model, params, buckets=buckets, max_decode_len=max_decode,
+                **kw)
+            replay(eng, stream, warmup=False)  # compile pass
+            disp0 = eng.stats["decode_dispatches"]
+            steps0 = eng.stats["decode_steps"]
+            lanes0 = eng.stats["active_lane_steps"]
+            passes = []
+            for _ in range(3):
+                passes.append(replay(eng, stream, warmup=False))
+            done, wall, tok_s, ttft = sorted(passes, key=lambda p: p[1])[1]
+            streams[name] = [{r.rid: tuple(r.tokens_out) for r in p[0]}
+                             for p in passes]
+            toks = sum(len(r.tokens_out) for r in done)
+            disp_tok = (eng.stats["decode_dispatches"] - disp0) / 3 / toks
+            conc = ((eng.stats["active_lane_steps"] - lanes0)
+                    / max(eng.stats["decode_steps"] - steps0, 1))
+            metrics[name] = {
+                "tok_s": round(tok_s, 2),
+                "ttft_p50_ms": round(float(np.percentile(ttft, 50)), 3),
+                "ttft_p95_ms": round(float(np.percentile(ttft, 95)), 3),
+                "dispatches_per_token": round(disp_tok, 4),
+                "sustained_concurrency": round(conc, 2),
+                "max_batch": eng.max_batch,
+            }
+            if eng.paged:
+                metrics[name].update(
+                    prefix_hits=eng.stats["prefix_hits"],
+                    prefix_hit_tokens=eng.stats["prefix_hit_tokens"],
+                    prefills=eng.stats["prefills"],
+                    pages_peak=eng.stats["pages_peak"],
+                    preemptions=eng.stats["preemptions"])
+            row(f"serve_paged_{name}_per_token", wall / toks * 1e6,
+                f"{tok_s:.1f}tok/s conc={conc:.2f} "
+                f"ttft_p50={np.percentile(ttft, 50):.1f}ms "
+                f"disp/tok={disp_tok:.3f}")
+    finally:
+        kops._IMPL = prev_impl
+    for k in range(3):  # every pass: cold tree on 1, warm prefix cache after
+        assert streams["dense_slots"][k] == streams["paged"][k], \
+            f"paged stream diverged from dense slots on pass {k}"
+    speedup = metrics["paged"]["tok_s"] / metrics["dense_slots"]["tok_s"]
+    conc_gain = (metrics["paged"]["sustained_concurrency"]
+                 / max(metrics["dense_slots"]["sustained_concurrency"], 1e-9))
+    row("serve_paged_vs_dense_tok_s", speedup,
+        "paged tok/s over dense slots at equal KV HBM (>=1.3 target)")
+    row("serve_paged_vs_dense_concurrency", conc_gain,
+        "sustained concurrent requests, paged/dense (>=1.5 target)")
+    state.setdefault("bench_json", {})["serve_paged"] = {
+        "engines": metrics,
+        "paged_vs_dense_tok_s": round(speedup, 3),
+        "paged_vs_dense_concurrency": round(conc_gain, 3),
+        "streams_bit_identical": True,
+    }
+
+
 BENCHES = {
     "table1": table1_encoder_latency,
     "table2": table2_full_model_eq1,
@@ -296,28 +399,100 @@ BENCHES = {
     "gmi": gmi_collective_models,
     "kernels": bench_int8_kernels,
     "serve_cb": serve_cb,
+    "serve_paged": serve_paged,
 }
 
 # benches whose state is produced by earlier benches in the full sweep
 _ORDER = ["table1", "table2", "table3", "table4", "sec9", "table5",
-          "fig15", "gmi", "kernels", "serve_cb"]
+          "fig15", "gmi", "kernels", "serve_cb", "serve_paged"]
 _NEEDS = {"table2": ["table1"], "table3": ["table1"],
           "table4": ["table1", "table3"], "table5": ["sec9"]}
+
+# perf-regression gate thresholds (--check-against): tok/s may regress up
+# to 25% before failing (CI boxes are noisy); dispatches/token is
+# scheduling-deterministic up to arrival-timing jitter, so it gets a
+# tighter 10% band — any real fusion regression is far larger than that.
+# Absolute tok/s is machine-relative (regenerate the baseline when the
+# runner class changes); the speedup *ratios* below are gated too because
+# they compare two engines measured on the same box in the same run and
+# therefore transfer across hardware.
+TOK_S_REGRESSION = 0.25
+DISP_TOK_INCREASE = 0.10
+RATIO_KEYS = ("paged_vs_dense_tok_s", "paged_vs_dense_concurrency",
+              "fused_vs_single_step_tok_s", "dispatches_per_token_drop")
+
+
+def _gate_walk(base, cur, path=""):
+    """Compare a bench_json tree against a committed baseline; returns a
+    list of violation strings (empty = gate passes).  Only the metrics the
+    gate owns are compared — every `tok_s` (lower = regression) and every
+    `dispatches_per_token` (higher = regression); other keys are context."""
+    bad = []
+    if isinstance(base, dict):
+        for k, v in base.items():
+            sub = cur.get(k) if isinstance(cur, dict) else None
+            if sub is None and not isinstance(v, dict):
+                if k in ("tok_s", "dispatches_per_token") or k in RATIO_KEYS:
+                    bad.append(f"{path}{k}: missing from current run")
+                continue
+            bad += _gate_walk(v, sub, f"{path}{k}.")
+        return bad
+    key = path.rstrip(".").rsplit(".", 1)[-1]
+    if key == "tok_s" or key in RATIO_KEYS:
+        floor = base * (1 - TOK_S_REGRESSION)
+        if cur < floor:
+            bad.append(f"{path.rstrip('.')}: {cur} < {floor:.2f} "
+                       f"(baseline {base}, -{TOK_S_REGRESSION:.0%} floor)")
+    elif key == "dispatches_per_token":
+        ceil = base * (1 + DISP_TOK_INCREASE)
+        if cur > ceil:
+            bad.append(f"{path.rstrip('.')}: {cur} > {ceil:.4f} "
+                       f"(baseline {base}, +{DISP_TOK_INCREASE:.0%} ceiling)")
+    return bad
+
+
+def check_against(baseline_path: str, bench_json: Dict) -> int:
+    """Exit-code-style perf gate: 0 = within thresholds, 1 = regression."""
+    import json
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base.pop("rows", None)
+    base.pop("_meta", None)
+    bad = _gate_walk(base, bench_json)
+    if bad:
+        print(f"PERF GATE FAILED vs {baseline_path}:")
+        for b in bad:
+            print(f"  REGRESSION {b}")
+        return 1
+    print(f"perf gate OK vs {baseline_path}")
+    return 0
 
 
 def main(argv=None) -> None:
     import json
     import sys
     args = list(argv if argv is not None else sys.argv[1:])
-    json_path = None
-    if "--json" in args:  # --json PATH: machine-readable perf trajectory
-        i = args.index("--json")
+
+    def _path_flag(flag):
+        if flag not in args:
+            return None
+        i = args.index(flag)
         try:
-            json_path = args[i + 1]
+            p = args[i + 1]
         except IndexError:
-            raise SystemExit("--json requires a file path")
+            raise SystemExit(f"{flag} requires a file path")
         del args[i:i + 2]
-    names = args or _ORDER
+        return p
+
+    json_path = _path_flag("--json")  # machine-readable perf trajectory
+    check_path = _path_flag("--check-against")  # perf-regression gate
+    write_baseline = _path_flag("--write-baseline")
+    shared_prefix = "--shared-prefix" in args
+    if shared_prefix:  # serve_cb --shared-prefix: add the paged workload
+        args.remove("--shared-prefix")
+    names = args or list(_ORDER)
+    if shared_prefix and "serve_paged" not in names:
+        names.append("serve_paged")
     unknown = [n for n in names if n not in BENCHES]
     if unknown:  # fail before running anything — compiles cost minutes
         raise SystemExit(
@@ -333,11 +508,27 @@ def main(argv=None) -> None:
             BENCHES[name](state)
             ran.add(name)
     print(f"\n{len(ROWS)} benchmark rows")
+    bench_json = state.get("bench_json", {})
     if json_path is not None:
-        payload = dict(state.get("bench_json", {}), rows=ROWS)
+        payload = dict(bench_json, rows=ROWS)
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {json_path}")
+    if write_baseline is not None:
+        payload = dict(bench_json, _meta={
+            "note": "perf-gate baseline; regenerate ON A QUIET BOX OF THE "
+                    "CI RUNNER CLASS with `python benchmarks/run.py "
+                    "serve_cb --shared-prefix --write-baseline "
+                    "benchmarks/baseline.json` (absolute tok_s is "
+                    "machine-relative; the speedup ratios transfer)",
+            "gate": {"tok_s_regression": TOK_S_REGRESSION,
+                     "dispatches_per_token_increase": DISP_TOK_INCREASE,
+                     "ratio_keys": list(RATIO_KEYS)}})
+        with open(write_baseline, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote baseline {write_baseline}")
+    if check_path is not None:
+        sys.exit(check_against(check_path, bench_json))
 
 
 if __name__ == "__main__":

@@ -23,6 +23,13 @@ Masking is slot-metadata driven, matching the serving cache contract
     positions, so ring-buffer caches (slot = pos % window) need no unrolling;
   * `active` gates whole rows: an inactive serving slot contributes an
     all-masked row and the epilogue emits exact zeros (l == 0), never NaN.
+
+`paged_flash_decode` is the same online-softmax body over a *paged* KV
+arena: the per-lane page table is scalar-prefetched and indexed inside the
+BlockSpec index maps, so walking a lane's pages in logical order is just
+the grid's DMA schedule — the gather costs nothing beyond the block
+fetches the dense kernel already does, and radix-shared prefix pages are
+fetched per lane that names them, never duplicated in HBM.
 """
 from __future__ import annotations
 
@@ -83,6 +90,110 @@ def _kernel(qpos_ref, active_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
         # (inactive slot / fresh cache, every key masked) yields exact 0.
         o_ref[0, 0] = (acc_ref[...]
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_kernel(pt_ref, qpos_ref, active_ref, q_ref, k_ref, v_ref,
+                  kpos_ref, o_ref, m_ref, l_ref, acc_ref, *, n_p: int):
+    """Same online-softmax body as `_kernel`, but the KV block walked at
+    grid step j is whichever *page* the lane's page table names — the
+    gather happens in the BlockSpec index map (scalar-prefetched page
+    table), so the kernel body never sees page indirection at all."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]  # (G, hd)
+    k = k_ref[0, :, 0, :]  # (ps, hd) — the page named by pt[b, j]
+    v = v_ref[0, :, 0, :]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (G, ps)
+
+    qpos = qpos_ref[0, 0]
+    kpos = kpos_ref[0]  # (ps,) absolute positions; 2^30 = never written
+    # causal test rejects the sentinel, so trash/unwritten page slots and
+    # out-of-range page-table entries are unreachable by construction
+    msk = kpos[None, :] <= qpos
+    msk &= active_ref[0, 0] != 0
+
+    s = jnp.where(msk, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(msk, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(j == n_p - 1)
+    def _epilogue():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                       kpos: jax.Array, page_table: jax.Array,
+                       qpos: jax.Array, active: jax.Array, *,
+                       interpret: bool = False) -> jax.Array:
+    """Split-KV decode over a *paged* KV arena.
+
+    q: (B, KVH, G, hd) pre-scaled grouped queries; k/v: (P, ps, KVH, hd)
+    global page arenas shared by every lane; kpos: (P, ps) int32 absolute
+    positions per arena slot (2^30 = never written); page_table:
+    (B, MAXP) int32 — lane b's logical KV positions [j*ps, (j+1)*ps) live
+    in arena page page_table[b, j].  Entries may repeat across lanes
+    (radix-shared prefixes) and unused entries may point anywhere whose
+    kpos are all sentinel (the allocator's trash page 0).  qpos: (B, 1)
+    int32; active: (B, 1) int32 row gate.  Returns (B, KVH, G, hd).
+
+    Grid: (batch, kv_heads, MAXP) with pages innermost; the page table is
+    scalar-prefetched and indexed in the k/v/kpos BlockSpec index maps, so
+    the per-page DMA *is* the gather — the kernel body is identical to the
+    dense split-KV kernel's online softmax.
+    """
+    b, kvh, g, hd = q.shape
+    ps = k.shape[1]
+    maxp = page_table.shape[1]
+    grid = (b, kvh, maxp)
+    kern = functools.partial(_paged_kernel, n_p=maxp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j, pt: (b, 0),
+                         memory_space=pltpu.SMEM),  # qpos
+            pl.BlockSpec((1, 1), lambda b, h, j, pt: (b, 0),
+                         memory_space=pltpu.SMEM),  # active
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, j, pt: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, j, pt: (pt[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps), lambda b, h, j, pt: (pt[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b, h, j, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),   # running max m
+            pltpu.VMEM((g, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((g, hd), jnp.float32),  # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, qpos, active, q, k, v, kpos)
 
 
 @functools.partial(

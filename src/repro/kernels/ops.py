@@ -210,6 +210,48 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return out[:, :, :g].reshape(b, h, hd)
 
 
+def paged_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                       kpos: jax.Array, page_table: jax.Array,
+                       qpos: jax.Array,
+                       active: Optional[jax.Array] = None,
+                       impl: Optional[str] = None) -> jax.Array:
+    """Single-query decode attention over a paged KV arena.
+
+    q: (B, H, hd) *pre-scaled* by 1/sqrt(hd); k/v: (P, ps, KVH, hd) global
+    page arenas; kpos: (P, ps) int32 absolute positions (2^30 =
+    never-written sentinel); page_table: (B, MAXP) int32 mapping lane b's
+    logical page j to an arena page (entries may repeat across lanes —
+    radix-shared prefixes; unused entries must name pages whose kpos are
+    all sentinel, e.g. the allocator's trash page 0); qpos: (B,) int32;
+    active: optional (B,) bool lane gate.  Returns (B, H, hd) in q.dtype.
+
+    Unlike the dense wrapper there is no KV padding to do: pages are the
+    tile granularity already.  Sliding windows aren't supported here — the
+    serving engine keeps windowed (ring-buffer) caches on the dense slot
+    path.
+    """
+    impl = impl or default_impl()
+    if impl == "ref":
+        return _ref.paged_flash_decode(q, k, v, kpos, page_table, qpos,
+                                       active=active)
+    from repro.kernels import flash_decode as _fd
+
+    b, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    gp = _rup(g, 8)  # group dim is the sublane axis: pad to tile granularity
+    if gp != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    act = (jnp.ones((b, 1), jnp.int32) if active is None
+           else active.astype(jnp.int32).reshape(b, 1))
+    out = _fd.paged_flash_decode(
+        qg, k, v, kpos.astype(jnp.int32), page_table.astype(jnp.int32),
+        qpos.astype(jnp.int32).reshape(b, 1), act,
+        interpret=impl == "interpret")
+    return out[:, :, :g].reshape(b, h, hd)
+
+
 def i_layernorm(q8: jax.Array, prep: LNParams, impl: Optional[str] = None):
     """Integer LayerNorm over last axis. Returns (int32 values, s_out)."""
     impl = impl or default_impl()

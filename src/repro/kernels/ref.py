@@ -83,6 +83,29 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(b, h, hd)
 
 
+def paged_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                       kpos: jax.Array, page_table: jax.Array,
+                       qpos: jax.Array,
+                       active: Optional[jax.Array] = None) -> jax.Array:
+    """Oracle for the paged split-KV decode kernel: gather, then decode.
+
+    q: (B, H, hd) pre-scaled; k/v: (P, ps, KVH, hd) global page arenas;
+    kpos: (P, ps) absolute positions (2^30 = never written); page_table:
+    (B, MAXP) int32 (entries may repeat across lanes — shared prefix
+    pages).  The gathered per-lane cache is laid out exactly like the
+    dense slot cache (logical position p at row p), so on equal logical
+    lengths this oracle is *bitwise* identical to `flash_decode` over the
+    equivalent dense cache — the property the engine equality tests lean
+    on.
+    """
+    b = q.shape[0]
+    kvh, hd = k.shape[2], k.shape[3]
+    kg = k[page_table].reshape(b, -1, kvh, hd)
+    vg = v[page_table].reshape(b, -1, kvh, hd)
+    kpg = kpos[page_table].reshape(b, -1)
+    return flash_decode(q, kg, vg, kpg, qpos, active=active)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True,
                     segment_ids: Optional[jax.Array] = None) -> jax.Array:

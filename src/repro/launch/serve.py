@@ -25,7 +25,7 @@ from repro.launch.mesh import make_mesh
 from repro.models.transformer import init_params, make_model
 from repro.runtime.stragglers import StragglerMonitor
 from repro.serving.engine import ContinuousBatchingEngine, WaveEngine
-from repro.serving.stream import poisson_requests
+from repro.serving.stream import poisson_requests, shared_prefix_requests
 
 
 def main(argv=None):
@@ -43,6 +43,17 @@ def main(argv=None):
                          "one-dispatch-per-token baseline; docs/perf.md)")
     ap.add_argument("--no-plan", action="store_true",
                     help="skip Cluster-Builder placement (debug)")
+    ap.add_argument("--stream", choices=["poisson", "shared-prefix"],
+                    default="poisson",
+                    help="shared-prefix: one system prompt + unique tails "
+                         "(the radix prefix cache's target ingress)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged-KV page length (rows); paged mode is "
+                         "auto-enabled for all-attention models without a "
+                         "plan (docs/serving.md)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV page-pool size (0 = match the dense slot "
+                         "table's capacity)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -59,15 +70,27 @@ def main(argv=None):
                           mode="serve")
     monitor = StragglerMonitor()
     cls = ContinuousBatchingEngine if args.engine == "cb" else WaveEngine
+    kw = {}
+    if cls is ContinuousBatchingEngine:
+        kw["page_size"] = args.page_size
+        if args.num_pages:
+            kw["num_pages"] = args.num_pages
     engine = cls(model, params, max_batch=args.max_batch,
                  buckets=(16, 32, 64, 128), plan=plan, monitor=monitor,
-                 decode_horizon=args.decode_horizon)
+                 decode_horizon=args.decode_horizon, **kw)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
-    for r in poisson_requests(rng, args.requests, cfg.vocab_size,
-                              len_range=(4, 60), budgets=args.max_new,
-                              rate=args.rate):
+    if args.stream == "shared-prefix":
+        stream = shared_prefix_requests(rng, args.requests, cfg.vocab_size,
+                                        prefix_len=48, suffix_range=(3, 9),
+                                        budgets=args.max_new,
+                                        rate=args.rate)
+    else:
+        stream = poisson_requests(rng, args.requests, cfg.vocab_size,
+                                  len_range=(4, 60), budgets=args.max_new,
+                                  rate=args.rate)
+    for r in stream:
         engine.submit(r)
     done = engine.run()
     wall = time.perf_counter() - t0

@@ -203,6 +203,8 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
               segment_ids: Optional[jax.Array] = None,
               cache: Optional[Dict[str, jax.Array]] = None,
               pos_contiguous: bool = False,
+              page_table: Optional[jax.Array] = None,
+              active: Optional[jax.Array] = None,
               ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     """Full attention block.
 
@@ -212,6 +214,13 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
     pos_contiguous: caller guarantees positions == broadcast(arange(S)) (no
     pad sentinels), so the purely positional mask of the Pallas
     flash-attention kernel is exact and long prefill may route through it.
+    page_table: (B, MAXP) int32 — marks the cache as a *paged* KV arena
+    (`k`/`v`: (P, ps, KVH, hd), `kpos`: (P, ps)): lane b's logical position
+    q lives at arena page page_table[b, q // ps], offset q % ps.  Decode
+    writes are scattered through the table; `active` gates them (inactive
+    lanes write to the allocator's trash page 0 with sentinel kpos, so a
+    parked lane can never corrupt live pages — the paged analogue of the
+    dense path's cache_map where-masking).
     """
     from repro.kernels import ops as kops
     from repro.models.layers import dense
@@ -270,6 +279,44 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
             cv = cache["v"].at[:, idx].set(vw.astype(cache["v"].dtype))
             ckp = cache["kpos"].at[:, idx].set(pw)
             new_cache = {"k": ck, "v": cv, "kpos": ckp}
+    elif page_table is not None:
+        # paged decode: Sq == 1 against the global page arena.  The write
+        # is a (page, offset) scatter through the lane's page table; the
+        # copy-on-write alignment rule (serving engine) guarantees an
+        # active lane's current write page is exclusively owned, so lanes
+        # never race on a page.  Inactive lanes are redirected to the
+        # trash page (0) with sentinel kpos instead of being where-masked
+        # afterwards — an arena has no batch axis to mask over.
+        assert not window, "paged KV does not support sliding windows"
+        b = x.shape[0]
+        ck, cv = cache["k"], cache["v"]  # (P, ps, KVH, hd)
+        ps = ck.shape[1]
+        cpos = positions[:, 0].astype(jnp.int32)
+        act = (jnp.ones((b,), bool) if active is None
+               else active.astype(bool))
+        page = page_table[jnp.arange(b), cpos // ps]
+        wr_page = jnp.where(act, page, 0)
+        wr_off = jnp.where(act, cpos % ps, 0)
+        kpos_val = jnp.where(act, cpos, jnp.int32(2 ** 30))
+        ck = ck.at[wr_page, wr_off].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[wr_page, wr_off].set(v[:, 0].astype(cv.dtype))
+        kpos = cache["kpos"].at[wr_page, wr_off].set(kpos_val)
+        if impl == "pallas" and cfg.causal:
+            # the page-gathering kernel only routes compiled: its grid is
+            # (B, KVH, MAXP) and decode dispatches thousands of times, so
+            # the interpreter's per-program overhead (~8x the jnp gather
+            # at serving shapes) would dominate CPU serving — interpret
+            # CI exercises the kernel body in tests/test_paged_kv.py
+            out = kops.paged_flash_decode(
+                qs[:, 0], ck.astype(q.dtype), cv.astype(q.dtype), kpos,
+                page_table, cpos, active=act, impl=impl)[:, None]
+        else:
+            # jnp fallback: gather-through-the-table oracle (bitwise equal
+            # to the dense ref path on equal logical lengths)
+            out = kops.paged_flash_decode(
+                qs[:, 0], ck.astype(q.dtype), cv.astype(q.dtype), kpos,
+                page_table, cpos, active=act, impl="ref")[:, None]
+        new_cache = {"k": ck, "v": cv, "kpos": kpos}
     else:
         # decode: Sq == 1; the token's absolute position comes from the
         # model-level counter (positions[:, 0]) — the cache itself is
@@ -307,6 +354,27 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
     out = out.reshape(x.shape[0], x.shape[1], nh * hd)
     wo = fsdp_int8_gather(p["wo"], tp_dim=0)
     return dense(out, wo), new_cache
+
+
+def init_paged_attn_cache(cfg, num_pages: int, page_size: int,
+                          dtype=COMPUTE_DTYPE):
+    """Paged KV arena: a global page pool instead of per-lane slot rows.
+
+    No batch axis — lanes address the arena through their page tables, and
+    capacity is shared: HBM scales with the pages actually allocated, not
+    max_batch * worst-case slot length.  kpos starts at the never-written
+    sentinel everywhere (including the reserved trash page 0), and the
+    serving engine re-sentinels a page's kpos on reallocation, so a page's
+    previous occupant is unreachable by construction.
+    """
+    assert not cfg.local_window, "paged KV does not support sliding windows"
+    return {
+        "k": jnp.zeros((num_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "v": jnp.zeros((num_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
+                       dtype),
+        "kpos": jnp.full((num_pages, page_size), 2**30, jnp.int32),
+    }
 
 
 def init_attn_cache(cfg, batch: int, seq_len: int, dtype=COMPUTE_DTYPE):

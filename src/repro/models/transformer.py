@@ -81,14 +81,16 @@ def block_init(key, cfg: ModelConfig, pos_in_period: int) -> Params:
 
 def block_apply(cfg: ModelConfig, pos_in_period: int, p: Params, h: jax.Array,
                 positions: jax.Array, segment_ids, state,
-                pos_contiguous: bool = False):
+                pos_contiguous: bool = False, page_table=None, active=None):
     """Returns (h, new_state, aux_loss)."""
     kind = cfg.block_kind(pos_in_period)
     z = norm(h, p["norm1"], cfg)
     if kind == "attn":
         y, new_state = attn_mod.attention(z, p["mix"], cfg, positions,
                                           segment_ids, cache=state,
-                                          pos_contiguous=pos_contiguous)
+                                          pos_contiguous=pos_contiguous,
+                                          page_table=page_table,
+                                          active=active)
     else:
         # pads (pos sentinel 2^30 or segment -1) must not touch the state
         valid = positions < 2**29
@@ -154,6 +156,25 @@ def _batch_broadcast(mask: jax.Array, axis: int, ndim: int):
     return mask.reshape(shape)
 
 
+def paged_cache_map(fn, *trees):
+    """Map ``fn(page_axis, leaf_name, *leaves)`` over the scan/tail arena
+    leaves of paged cache pytrees.
+
+    Arena leaves ((P, ps, ...) under "tail", (n_rep, P, ps, ...) under
+    "scan") have a *page* axis where dense slot caches have a batch axis;
+    top-level "pos"/"pt" are per-lane and handled by the caller.
+    """
+
+    def go(axis, name, *subs):
+        if isinstance(subs[0], dict):
+            return {k: go(axis, k, *[s[k] for s in subs]) for k in subs[0]}
+        return fn(axis, name, *subs)
+
+    return {k: (go(1 if k == "scan" else 0, k, *[t[k] for t in trees])
+                if k in ("scan", "tail") else trees[0][k])
+            for k in trees[0]}
+
+
 # ---------------------------------------------------------------------------
 # full model
 # ---------------------------------------------------------------------------
@@ -191,11 +212,15 @@ class Model:
     # -- core --------------------------------------------------------------
 
     def backbone(self, params: Params, h: jax.Array, positions: jax.Array,
-                 segment_ids=None, caches=None, pos_contiguous: bool = False):
+                 segment_ids=None, caches=None, pos_contiguous: bool = False,
+                 page_table=None, active=None):
         """h: (B,S,D) embeddings -> (h_final, new_caches, aux).
 
         pos_contiguous: positions are a plain broadcast arange (no pad
         sentinels) — lets long-prefill attention take the Pallas fused path.
+        page_table/active: paged-KV decode (models/attention.py) — the
+        table is shared by every layer, so it rides alongside positions
+        instead of being stacked into the per-layer cache pytree.
         """
         cfg = self.cfg
         n_rep, tail, kinds = layer_plan(cfg)
@@ -208,7 +233,8 @@ class Model:
                 st = None if period_caches is None else period_caches[f"b{i}"]
                 h, ns, a = block_apply(cfg, i, period_params[f"b{i}"], h,
                                        positions, segment_ids, st,
-                                       pos_contiguous=pos_contiguous)
+                                       pos_contiguous=pos_contiguous,
+                                       page_table=page_table, active=active)
                 if period_caches is not None:
                     new_caches[f"b{i}"] = ns
                 aux = aux + a
@@ -243,7 +269,8 @@ class Model:
             st = None if caches is None else caches["tail"][str(t)]
             h, ns, a = block_apply(cfg, t, params["tail"][str(t)], h,
                                    positions, segment_ids, st,
-                                   pos_contiguous=pos_contiguous)
+                                   pos_contiguous=pos_contiguous,
+                                   page_table=page_table, active=active)
             if caches is not None:
                 new_tail[str(t)] = ns
             aux = aux + a
@@ -302,6 +329,35 @@ class Model:
         return {"scan": scan_caches, "tail": tail_caches,
                 "pos": jnp.zeros((batch,), jnp.int32)}
 
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
+                         max_pages: int):
+        """Paged serving cache: global KV page arenas + per-lane tables.
+
+        Tree: {"scan"/"tail": per-layer {"k","v","kpos"} arenas with no
+        batch axis (models/attention.init_paged_attn_cache), "pos": (B,)
+        position counters, "pt": (B, max_pages) int32 page tables (0 = the
+        allocator's reserved trash page)}.  Only all-attention configs
+        qualify — recurrent state has no paged analogue, and ring-buffer
+        (windowed) caches stay on the dense slot path.
+        """
+        cfg = self.cfg
+        n_rep, tail, kinds = layer_plan(cfg)
+        bad = [k for k in kinds if k != "attn"]
+        assert not bad, f"paged KV needs an all-attention model, got {bad}"
+
+        def one_period():
+            return {f"b{i}": attn_mod.init_paged_attn_cache(
+                cfg, num_pages, page_size) for i in range(len(kinds))}
+
+        scan_caches = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape), one_period()
+        ) if n_rep else {}
+        tail_caches = {str(t): attn_mod.init_paged_attn_cache(
+            cfg, num_pages, page_size) for t in range(tail)}
+        return {"scan": scan_caches, "tail": tail_caches,
+                "pos": jnp.zeros((batch,), jnp.int32),
+                "pt": jnp.zeros((batch, max_pages), jnp.int32)}
+
     def prefill(self, params, caches, tokens=None, embeds=None,
                 positions=None, last_idx=None):
         """Fill caches from a (left-aligned) prompt.
@@ -342,6 +398,16 @@ class Model:
             x = token[:, None, :].astype(COMPUTE_DTYPE)
         positions = caches["pos"][:, None]
         sub = {"scan": caches["scan"], "tail": caches["tail"]}
+        if "pt" in caches:
+            # paged: writes are already active-gated inside attention (an
+            # arena has no batch axis for cache_map's where-masking), so
+            # only the per-lane position counters need the mask here
+            h, sub, _ = self.backbone(params, x, positions, caches=sub,
+                                      page_table=caches["pt"], active=active)
+            pos = caches["pos"] + 1 if active is None else jnp.where(
+                active, caches["pos"] + 1, caches["pos"])
+            return (lm_head(h[:, -1:], params["embed"])[:, 0],
+                    dict(sub, pos=pos, pt=caches["pt"]))
         h, sub, _ = self.backbone(params, x, positions, caches=sub)
         new_caches = dict(sub, pos=caches["pos"] + 1)
         if active is not None:
@@ -355,7 +421,10 @@ class Model:
                      active: jax.Array, n: int,
                      eos_id: Optional[jax.Array] = None,
                      budget: Optional[jax.Array] = None,
-                     pad_token: int = 0):
+                     pad_token: int = 0,
+                     forced: Optional[jax.Array] = None,
+                     forced_len: Optional[jax.Array] = None,
+                     forced_ptr: Optional[jax.Array] = None):
         """n fused greedy decode steps as one on-device ``lax.scan``.
 
         The serving fast path: instead of one jit dispatch + one (B, V)
@@ -372,8 +441,20 @@ class Model:
         so the token streams are bit-identical to n chained ``decode_step``
         calls reconciled on the host.
 
+        forced/forced_len/forced_ptr (all or none): per-lane queues of
+        *forced* input tokens — the prefix-cache hit path's prompt-suffix
+        ingest.  While ``forced_ptr[b] < forced_len[b]`` the lane feeds
+        ``forced[b, forced_ptr[b]]`` as the next input instead of its own
+        argmax, emits -1 (nothing generated yet), and leaves its budget and
+        EOS state untouched; the step that consumes the lane's last pending
+        input emits the first generated token.  This is chunked prefill
+        riding the decode loop: the forced tokens' KV lands at the right
+        positions and the resulting stream is bit-identical to a cold
+        prefill of the full prompt.
+
         Returns (tokens (n, B) int32 with -1 for inactive lanes, next token
-        (B,), active (B,), remaining budget (B,), caches).
+        (B,), active (B,), remaining budget (B,), caches) — with a forced
+        queue, the advanced forced_ptr (B,) is inserted before caches.
         """
         b = token.shape[0]
         if eos_id is None:
@@ -381,22 +462,49 @@ class Model:
         if budget is None:
             budget = jnp.full((b,), 2 ** 30, jnp.int32)
 
+        if forced is None:
+
+            def step(carry, _):
+                cur, act, rem, caches = carry
+                logits, caches = self.decode_step(params, caches, cur,
+                                                  active=act)
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                emit = jnp.where(act, nxt, -1)
+                rem = jnp.where(act, rem - 1, rem)
+                still = act & (nxt != eos_id) & (rem > 0)
+                # finished/free lanes feed the pad token, never a stale
+                # sample
+                cur = jnp.where(still, nxt, pad_token).astype(jnp.int32)
+                return (cur, still, rem, caches), emit
+
+            (cur, act, rem, caches), toks = jax.lax.scan(
+                step, (token.astype(jnp.int32), active, budget, caches),
+                None, length=n)
+            return toks, cur, act, rem, caches
+
+        fcap = forced.shape[1]
+        lane = jnp.arange(b)
+
         def step(carry, _):
-            cur, act, rem, caches = carry
+            cur, act, rem, fptr, caches = carry
             logits, caches = self.decode_step(params, caches, cur,
                                               active=act)
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            emit = jnp.where(act, nxt, -1)
-            rem = jnp.where(act, rem - 1, rem)
-            still = act & (nxt != eos_id) & (rem > 0)
-            # finished/free lanes feed the pad token, never a stale sample
-            cur = jnp.where(still, nxt, pad_token).astype(jnp.int32)
-            return (cur, still, rem, caches), emit
+            pending = fptr < forced_len  # this step's output is swallowed
+            emitting = act & ~pending
+            emit = jnp.where(emitting, nxt, -1)
+            rem = jnp.where(emitting, rem - 1, rem)
+            still = act & (pending | ((nxt != eos_id) & (rem > 0)))
+            feed = jnp.where(
+                pending, forced[lane, jnp.minimum(fptr, fcap - 1)], nxt)
+            cur = jnp.where(still, feed, pad_token).astype(jnp.int32)
+            fptr = jnp.where(act & pending, fptr + 1, fptr)
+            return (cur, still, rem, fptr, caches), emit
 
-        (cur, act, rem, caches), toks = jax.lax.scan(
-            step, (token.astype(jnp.int32), active, budget, caches), None,
-            length=n)
-        return toks, cur, act, rem, caches
+        (cur, act, rem, fptr, caches), toks = jax.lax.scan(
+            step, (token.astype(jnp.int32), active, budget,
+                   forced_ptr.astype(jnp.int32), caches), None, length=n)
+        return toks, cur, act, rem, fptr, caches
 
     def insert_prefill_cache(self, big, small, slot: jax.Array):
         """Write batch-1 prefill caches `small` into row `slot` of the
@@ -420,6 +528,63 @@ class Model:
             return jax.lax.dynamic_update_slice_in_dim(b, s, slot, axis=axis)
 
         return cache_map(leaf, big, small)
+
+    def admit_lane_cache(self, big, slot: jax.Array, pt_row: jax.Array,
+                         pos0: jax.Array, reset_pages: jax.Array,
+                         small=None, write_pages=None):
+        """Prepare one lane of a *paged* cache `big` for a new occupant.
+
+        reset_pages: (R,) int32 — arena pages whose `kpos` return to the
+        never-written sentinel before use (pages are recycled, so a new
+        owner must be unable to attend to the previous occupant's keys;
+        pad with the trash page 0, which is idempotently sentinel).
+        small/write_pages: optional batch-1 bucket cache from a dense
+        prefill plus the (W,) pages that receive it — positions
+        [0, W*page_size) land at write_pages in prompt order.  The lane's
+        page-table row becomes `pt_row` and its position counter `pos0`
+        (the prompt length; a prefix-cache hit passes hit_len and no
+        `small` — the suffix arrives through the decode loop's forced
+        queue instead).
+        """
+        slot = jnp.asarray(slot, jnp.int32)
+
+        def leaf(page_axis, name, b, s):
+            ps = b.shape[page_axis + 1]
+            if name == "kpos":
+                sent = jnp.full((reset_pages.shape[0], ps) if page_axis == 0
+                                else (b.shape[0], reset_pages.shape[0], ps),
+                                2 ** 30, b.dtype)
+                b = (b.at[reset_pages].set(sent) if page_axis == 0
+                     else b.at[:, reset_pages].set(sent))
+            if s is None:
+                return b
+            s = jnp.squeeze(s, axis=page_axis).astype(b.dtype)
+            n_wp = write_pages.shape[0]
+            need, got = n_wp * ps, s.shape[page_axis]
+            if got < need:
+                fill = 2 ** 30 if name == "kpos" else 0
+                pad = [(0, 0)] * s.ndim
+                pad[page_axis] = (0, need - got)
+                s = jnp.pad(s, pad, constant_values=fill)
+            elif got > need:  # lane owns fewer pages than the bucket spans
+                s = jax.lax.slice_in_dim(s, 0, need, axis=page_axis)
+            s = s.reshape(s.shape[:page_axis] + (n_wp, ps)
+                          + s.shape[page_axis + 1:])
+            return (b.at[write_pages].set(s) if page_axis == 0
+                    else b.at[:, write_pages].set(s))
+
+        sub = {"scan": small["scan"], "tail": small["tail"]} \
+            if small is not None else None
+        out = paged_cache_map(
+            lambda ax, name, bb: leaf(ax, name, bb, None), big) \
+            if sub is None else paged_cache_map(
+                lambda ax, name, bb, ss: leaf(ax, name, bb, ss), big,
+                {"scan": sub["scan"], "tail": sub["tail"],
+                 "pos": big["pos"], "pt": big["pt"]})
+        out["pos"] = big["pos"].at[slot].set(jnp.asarray(pos0, jnp.int32))
+        out["pt"] = big["pt"].at[slot].set(
+            jnp.asarray(pt_row, jnp.int32))
+        return out
 
 
 def make_model(cfg: ModelConfig, remat: bool = True) -> Model:

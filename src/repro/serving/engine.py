@@ -31,6 +31,14 @@ the decode state (current token, active lanes, budgets) never leaves the
 device.  `decode_horizon=1` reproduces the one-dispatch-per-token
 scheduler and is the measured baseline in `benchmarks/run.py serve_cb`.
 
+With ``paged=True`` (auto-enabled for all-attention models) the dense
+per-slot rows give way to a *paged KV pool*: a global page arena addressed
+through per-lane page tables, a free-list allocator and a radix prefix
+cache (core/packing), prefix-hit admissions that skip prefill by ingesting
+the un-hit suffix through the decode loop's forced-token queue, and
+page-aware admission with LRU prefix eviction and preempt-to-free
+(docs/serving.md §paged KV).
+
 `WaveEngine` keeps the seed's batch-synchronous scheduler (one batched
 prefill, decode to the slowest request) as the measured baseline for the
 `benchmarks/run.py serve_cb` comparison; its inner loop rides the same
@@ -108,6 +116,7 @@ class EngineBase:
         # one-dispatch-per-token baseline (docs/perf.md).
         assert decode_horizon >= 1
         self.decode_horizon = decode_horizon
+        self.paged = False  # ContinuousBatchingEngine may flip this
         self._horizons = [h for h in (1, 2, 4, 8, 16, 32, 64, 128)
                           if h <= decode_horizon] or [1]
         self._queue: List[Request] = []
@@ -142,6 +151,10 @@ class EngineBase:
             raise ValueError(
                 f"request {req.rid}: bucket+budget {need} exceeds slot "
                 f"cache_len {self.cache_len} (raise max_decode_len)")
+        if self.paged and self.pool.pages_for(need) > self.pool.num_pages - 1:
+            raise ValueError(
+                f"request {req.rid}: needs {self.pool.pages_for(need)} pages,"
+                f" pool has {self.pool.num_pages - 1} (raise num_pages)")
         req.t_enqueue = time.perf_counter()
         self._queue.append(req)
 
@@ -172,9 +185,21 @@ class EngineBase:
     def _decode_steps_fn(self, n: int):
         """Fused n-step decode program (compiled once per horizon length;
         jax.jit re-specializes per batch shape for the wave engine's
-        variable waves)."""
+        variable waves).  The paged variant threads the forced-token queue
+        (prefix-hit suffix ingest) through the same fused loop."""
         if n not in self._jit_decode_steps:
             model = self.model
+            if self.paged:
+
+                def pfn(params, caches, token, active, eos, budget,
+                        forced, flen, fptr):
+                    return model.decode_steps(
+                        params, caches, token, active, n, eos_id=eos,
+                        budget=budget, pad_token=PAD_TOKEN, forced=forced,
+                        forced_len=flen, forced_ptr=fptr)
+
+                self._jit_decode_steps[n] = jax.jit(pfn, donate_argnums=(1,))
+                return self._jit_decode_steps[n]
 
             def fn(params, caches, token, active, eos, budget):
                 return model.decode_steps(params, caches, token, active, n,
@@ -228,16 +253,20 @@ class EngineBase:
     def _append_block(self, block: np.ndarray, requests, now: float) -> None:
         """Reconcile one fetched (n, B) token block into request streams.
 
-        -1 marks a lane that was inactive at that step (free slot, or
-        early-exited on device after EOS/budget); device-side masking
-        mirrors `Request.append_token`'s done rule, so the host simply
-        appends until its own done flag flips."""
+        -1 marks a step at which the lane emitted nothing: a free slot, a
+        lane that early-exited on device after EOS/budget (-1 *suffix*), or
+        a prefix-hit lane still ingesting its prompt suffix through the
+        forced-token queue (-1 *prefix*) — so -1 entries are skipped, not
+        treated as end-of-block.  Device-side masking mirrors
+        `Request.append_token`'s done rule, so the host appends every
+        non-negative token until its own done flag flips; nothing real can
+        follow a lane's device-side exit."""
         for i, r in enumerate(requests):
             if r is None or r.done:
                 continue
             for tok in block[:, i]:
                 if tok < 0:
-                    break
+                    continue
                 r.append_token(int(tok), now)
                 if r.done:
                     break
@@ -251,7 +280,15 @@ class EngineBase:
         otherwise the cache has the full cache_len the wave engine decodes
         into directly.
         """
-        maxlen = max(len(r.prompt) for r in wave)
+        return self._prefill_prompts([r.prompt for r in wave], batch,
+                                     bucket_cache=bucket_cache)
+
+    def _prefill_prompts(self, prompts: List[np.ndarray], batch: int,
+                         bucket_cache: bool = False):
+        """`_prefill_batch` over raw token arrays (the paged engine
+        prefills *effective* prompts — original prompt + tokens already
+        generated before a preemption — which belong to no Request)."""
+        maxlen = max(len(p) for p in prompts)
         bucket = bucket_len(maxlen, self.buckets, lane=8)
         cache_slots = bucket if bucket_cache else self.cache_len
         toks = np.zeros((batch, bucket), np.int32)
@@ -259,12 +296,12 @@ class EngineBase:
         # (and cache slot i == position i for decode)
         pos = np.full((batch, bucket), 2 ** 30, np.int32)
         lengths = np.ones((batch,), np.int32)
-        for i, r in enumerate(wave):
-            n = len(r.prompt)
-            toks[i, :n] = r.prompt
+        for i, p in enumerate(prompts):
+            n = len(p)
+            toks[i, :n] = p
             pos[i, :n] = np.arange(n)
             lengths[i] = n
-        self.stats["prefill_tokens"] += int(sum(len(r.prompt) for r in wave))
+        self.stats["prefill_tokens"] += int(sum(len(p) for p in prompts))
         return self._prefill_fn(bucket, batch, cache_slots)(
             self.params, jnp.asarray(toks), jnp.asarray(pos),
             jnp.asarray(lengths))
@@ -275,16 +312,87 @@ class EngineBase:
 
 
 class ContinuousBatchingEngine(EngineBase):
-    """Slot-asynchronous scheduler: admit into freed slots between steps."""
+    """Slot-asynchronous scheduler: admit into freed slots between steps.
 
-    def __init__(self, *args, **kw):
+    With ``paged=True`` (the default wherever it applies: all-attention
+    models, no sliding window, no ClusterPlan) the per-slot dense KV rows
+    are replaced by a global page arena (`core/packing.PagePool`) addressed
+    through per-lane page tables, plus a radix prefix cache
+    (`core/packing.RadixPrefixCache`): requests sharing a prompt prefix
+    reuse its KV pages copy-free and skip prefill for the covered
+    positions — the un-hit suffix is ingested through the fused decode
+    loop's forced-token queue, so a hit admission costs zero prefill
+    dispatches.  Admission is page-aware (admit while pages are available,
+    evict cached prefixes LRU under pressure, preempt-to-free as the last
+    resort) and `stats` gains prefix_hits / prefix_hit_tokens /
+    pages_in_use / pages_peak / preemptions / active_lane_steps.
+    """
+
+    def __init__(self, *args, paged="auto", page_size: int = 16,
+                 num_pages: Optional[int] = None,
+                 max_hit_suffix: Optional[int] = None, **kw):
         super().__init__(*args, **kw)
-        self.stats.update(admitted=0, completed=0, prefills=0)
+        # active_lane_steps / decode_steps = sustained concurrency (mean
+        # occupied lanes per decode step) — the capacity metric the paged
+        # pool is meant to raise at fixed HBM
+        self.stats.update(admitted=0, completed=0, prefills=0,
+                          active_lane_steps=0)
         self._slot_caches = None
+        from repro.core.packing import PagePool, RadixPrefixCache
+        from repro.models.transformer import layer_plan
+        cfg = self.model.cfg
+        _, _, kinds = layer_plan(cfg)
+        eligible = (all(k == "attn" for k in kinds)
+                    and not cfg.local_window and cfg.causal
+                    and self.plan is None)
+        if paged == "auto":
+            paged = eligible
+        elif paged and not eligible:
+            raise ValueError(
+                "paged KV needs an all-attention, unwindowed, causal model "
+                "without a ClusterPlan (recurrent state and ring buffers "
+                "have no paged analogue; plan sharding covers slot tables)")
+        self.paged = bool(paged)
+        if self.paged:
+            self.page_size = page_size
+            # round the per-lane logical capacity up to whole pages: the
+            # gathered paged layout then matches a dense slot row exactly
+            # (position p at logical row p), which is what makes paged and
+            # dense token streams directly comparable
+            self.cache_len = -(-self.cache_len // page_size) * page_size
+            self.max_pages = self.cache_len // page_size
+            if num_pages is None:
+                # default pool = the dense slot table's capacity (+ trash
+                # page): paging is then never the binding constraint.  Size
+                # num_pages down — or max_batch up at fixed pool bytes — to
+                # trade worst-case headroom for real concurrency
+                # (docs/perf.md has the HBM inventory).
+                num_pages = self.max_batch * self.max_pages + 1
+            self.pool = PagePool(num_pages, page_size)
+            self.prefix_cache = RadixPrefixCache(self.pool)
+            # a hit whose un-hit suffix exceeds this re-ingests too many
+            # tokens through the decode loop; one dense prefill is cheaper
+            self.max_hit_suffix = (max(self.buckets)
+                                   if max_hit_suffix is None
+                                   else max_hit_suffix)
+            self._lane_pages: List[Optional[List[int]]] = \
+                [None] * self.max_batch
+            self._lane_forced = [0] * self.max_batch
+            self._jit_admit_cold: Dict = {}
+            self._jit_admit_hit = None
+            self._jit_admit_lane_paged = None
+            self._jit_park_lane = None
+            self._ladder_warm = False
+            self.stats.update(prefix_hits=0, prefix_hit_tokens=0,
+                              preemptions=0, pages_in_use=0, pages_peak=0)
 
     # -- internals ------------------------------------------------------------
 
     def _init_slot_caches(self):
+        if self.paged:
+            return self.model.init_paged_cache(
+                self.max_batch, self.pool.num_pages, self.page_size,
+                self.max_pages)
         caches = self.model.init_cache(self.max_batch, self.cache_len)
         if self.plan is not None:
             specs = self.plan.specs_for_caches(
@@ -319,6 +427,208 @@ class ContinuousBatchingEngine(EngineBase):
         self.stats["admitted"] += 1
         return caches, int(self._greedy_next(logits)[0])
 
+    # -- paged internals ------------------------------------------------------
+
+    def _admit_cold_fn(self, bucket: int, n_wp: int):
+        key = (bucket, n_wp)
+        if key not in self._jit_admit_cold:
+            model = self.model
+
+            def fn(big, small, slot, pt_row, pos0, reset, wp):
+                return model.admit_lane_cache(big, slot, pt_row, pos0,
+                                              reset, small=small,
+                                              write_pages=wp)
+
+            self._jit_admit_cold[key] = jax.jit(fn, donate_argnums=(0,))
+        return self._jit_admit_cold[key]
+
+    def _admit_hit_fn(self):
+        if self._jit_admit_hit is None:
+            model = self.model
+
+            def fn(big, slot, pt_row, pos0, reset):
+                return model.admit_lane_cache(big, slot, pt_row, pos0, reset)
+
+            self._jit_admit_hit = jax.jit(fn, donate_argnums=(0,))
+        return self._jit_admit_hit
+
+    def _admit_lane_paged_fn(self):
+        """Fused device-state update for a paged admission: lane decode
+        state plus the forced-token (suffix-ingest) queue row."""
+        if self._jit_admit_lane_paged is None:
+
+            def fn(cur, active, eos, budget, forced, flen, fptr, sl, tok,
+                   eos_id, bud, frow, fl):
+                return (cur.at[sl].set(tok), active.at[sl].set(True),
+                        eos.at[sl].set(eos_id), budget.at[sl].set(bud),
+                        forced.at[sl].set(frow), flen.at[sl].set(fl),
+                        fptr.at[sl].set(0))
+
+            self._jit_admit_lane_paged = jax.jit(
+                fn, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+        return self._jit_admit_lane_paged
+
+    def _park_lane_fn(self):
+        """Deactivate a lane on device (preemption): masked writes go to
+        the trash page from the next step on."""
+        if self._jit_park_lane is None:
+
+            def fn(cur, active, sl):
+                return cur.at[sl].set(PAD_TOKEN), active.at[sl].set(False)
+
+            self._jit_park_lane = jax.jit(fn, donate_argnums=(0, 1))
+        return self._jit_park_lane
+
+    def _effective_prompt(self, r: Request) -> np.ndarray:
+        """Prompt + tokens already generated: greedy decode is
+        deterministic, so a preempted request re-enters as if its output
+        so far had been part of the prompt and continues its stream."""
+        if not r.tokens_out:
+            return r.prompt
+        return np.concatenate(
+            [np.asarray(r.prompt, np.int32),
+             np.asarray(r.tokens_out, np.int32)])
+
+    def _admit_paged(self, r: Request, sl: int, st) -> bool:
+        """Page-aware admission of `r` into lane `sl`.
+
+        Gate: enough free pages for the request's un-shared need, after
+        LRU-evicting cached prefixes.  On a radix hit the lane reuses the
+        shared pages (copy-on-write by page alignment: it only ever writes
+        pages it owns exclusively) and skips prefill entirely — the un-hit
+        suffix rides the decode loop's forced-token queue.  Returns False
+        (nothing mutated, lookup refs released) when the pool can't cover
+        it; the scheduler may then preempt-to-free.
+        """
+        pool = self.pool
+        prompt = self._effective_prompt(r)
+        rem_budget = r.max_new_tokens - len(r.tokens_out)
+        need_pages = pool.pages_for(len(prompt) + rem_budget)
+        hit_pages, hit_len = self.prefix_cache.lookup(prompt)
+        if hit_len and len(prompt) - hit_len > self.max_hit_suffix:
+            pool.decref(hit_pages)  # suffix too long: prefill is cheaper
+            hit_pages, hit_len = [], 0
+        own_need = need_pages - len(hit_pages)
+        if own_need > pool.free_pages:
+            self.prefix_cache.evict(own_need - pool.free_pages)
+        if own_need > pool.free_pages:
+            pool.decref(hit_pages)
+            return False
+        own = pool.alloc(own_need)
+        pages = hit_pages + own
+        pt_row = np.zeros((self.max_pages,), np.int32)
+        pt_row[:len(pages)] = pages
+        reset = np.zeros((self.max_pages,), np.int32)  # trash-page padded
+        reset[:len(own)] = own
+        self.stats["admitted"] += 1
+        if hit_len:
+            suffix = prompt[hit_len:]
+            st["caches"] = self._admit_hit_fn()(
+                st["caches"], sl, jnp.asarray(pt_row), hit_len,
+                jnp.asarray(reset))
+            frow = np.zeros((self.cache_len,), np.int32)
+            frow[:len(suffix) - 1] = suffix[1:]
+            (st["cur"], st["active"], st["eos"], st["budget"], st["forced"],
+             st["flen"], st["fptr"]) = self._admit_lane_paged_fn()(
+                st["cur"], st["active"], st["eos"], st["budget"],
+                st["forced"], st["flen"], st["fptr"], sl, int(suffix[0]),
+                r.eos_id, rem_budget, jnp.asarray(frow),
+                len(suffix) - 1)
+            self._lane_forced[sl] = len(suffix) - 1
+            self.stats["prefix_hits"] += 1
+            self.stats["prefix_hit_tokens"] += int(hit_len)
+            r.t_admitted = time.perf_counter()
+        else:
+            logits, small = self._prefill_prompts([prompt], 1,
+                                                  bucket_cache=True)
+            bucket = bucket_len(len(prompt), self.buckets, lane=8)
+            n_wp = min(self.pool.pages_for(bucket), len(pages))
+            st["caches"] = self._admit_cold_fn(bucket, n_wp)(
+                st["caches"], small, sl, jnp.asarray(pt_row), len(prompt),
+                jnp.asarray(reset), jnp.asarray(pages[:n_wp], np.int32))
+            self.stats["prefills"] += 1
+            # register the prompt's full pages for future prefix hits —
+            # their KV is complete once the insert above runs (device
+            # program order also sequences it before any later reader);
+            # hit-path suffix pages are never registered because their KV
+            # fills in over later decode dispatches and a preemption could
+            # strand them half-written
+            self.prefix_cache.insert(prompt, pages)
+            tok = int(self._greedy_next(logits)[0])
+            t_now = time.perf_counter()
+            r.t_admitted = t_now
+            r.append_token(tok, t_now)
+            self._lane_forced[sl] = 0
+            if not r.done:
+                (st["cur"], st["active"], st["eos"], st["budget"],
+                 st["forced"], st["flen"], st["fptr"]) = \
+                    self._admit_lane_paged_fn()(
+                        st["cur"], st["active"], st["eos"], st["budget"],
+                        st["forced"], st["flen"], st["fptr"], sl, tok,
+                        r.eos_id, r.max_new_tokens - len(r.tokens_out),
+                        jnp.zeros((self.cache_len,), jnp.int32), 0)
+        self._lane_pages[sl] = pages
+        self.stats["pages_in_use"] = self.pool.pages_in_use
+        self.stats["pages_peak"] = max(self.stats["pages_peak"],
+                                       self.pool.pages_in_use)
+        return True
+
+    def _release_lane(self, sl: int) -> None:
+        """Return lane `sl`'s page references to the pool (tree references
+        keep registered prefix pages alive for future hits)."""
+        if self._lane_pages[sl] is not None:
+            self.pool.decref(self._lane_pages[sl])
+            self._lane_pages[sl] = None
+        self._lane_forced[sl] = 0
+        self.stats["pages_in_use"] = self.pool.pages_in_use
+
+    def _preempt(self, slots, pending, st) -> bool:
+        """Free pages by evicting the occupied lane with the most work
+        left (it holds the most still-unearned pages).  The victim is
+        re-queued with its stream intact — greedy decode is deterministic,
+        so re-admission (usually a prefix hit on its own registered pages)
+        continues exactly where it stopped."""
+        occ = [(i, r) for i, r in enumerate(slots) if r is not None]
+        if not occ:
+            return False
+        sl, victim = max(occ, key=lambda ir: ir[1].max_new_tokens
+                         - len(ir[1].tokens_out))
+        slots[sl] = None
+        st["cur"], st["active"] = self._park_lane_fn()(
+            st["cur"], st["active"], sl)
+        self._release_lane(sl)
+        pending.append(victim)
+        self.stats["preemptions"] += 1
+        return True
+
+    def _reconcile_dispatch(self, toks, slots, done, n: int,
+                            t_step: float) -> None:
+        """Shared per-dispatch bookkeeping for the dense and paged loops:
+        fetch the (n, B) token block (the only per-dispatch device sync),
+        account stats, mirror the paged suffix-ingest consumption, append
+        streams, and sweep completed lanes out of their slots."""
+        block = np.asarray(toks)
+        self.stats["decode_dispatches"] += 1
+        self.stats["decode_steps"] += n
+        self.stats["device_syncs"] += 1
+        self.stats["active_lane_steps"] += \
+            sum(r is not None for r in slots) * n
+        if self.monitor is not None:
+            self.monitor.observe(self.stats["decode_steps"],
+                                 (time.perf_counter() - t_step) / n)
+        if self.paged:
+            for i in range(self.max_batch):  # host mirror of suffix ingest
+                if slots[i] is not None:
+                    self._lane_forced[i] = max(0, self._lane_forced[i] - n)
+        self._append_block(block, slots, time.perf_counter())
+        for i, r in enumerate(slots):
+            if r is not None and r.done:
+                done.append(r)
+                slots[i] = None  # device lane already inactive
+                if self.paged:
+                    self._release_lane(i)
+                self.stats["completed"] += 1
+
     # -- scheduler loop -------------------------------------------------------
 
     def run(self) -> List[Request]:
@@ -327,6 +637,8 @@ class ContinuousBatchingEngine(EngineBase):
         Admission honours `Request.t_arrival` (seconds after this call), so
         a Poisson stream can be replayed by submitting everything up front.
         """
+        if self.paged:
+            return self._run_paged()
         if self._slot_caches is None:
             self._slot_caches = self._init_slot_caches()
         caches = self._slot_caches
@@ -390,21 +702,128 @@ class ContinuousBatchingEngine(EngineBase):
             t_step = time.perf_counter()
             toks, cur, active, budget, caches = self._decode_steps_fn(n)(
                 self.params, caches, cur, active, eos, budget)
-            block = np.asarray(toks)  # the only per-dispatch device sync
-            self.stats["decode_dispatches"] += 1
-            self.stats["decode_steps"] += n
-            self.stats["device_syncs"] += 1
-            if self.monitor is not None:
-                self.monitor.observe(self.stats["decode_steps"],
-                                     (time.perf_counter() - t_step) / n)
-            self._append_block(block, slots, time.perf_counter())
-            for i, r in enumerate(slots):
-                if r is not None and r.done:
-                    done.append(r)
-                    slots[i] = None  # device lane already inactive
-                    self.stats["completed"] += 1
+            self._reconcile_dispatch(toks, slots, done, n, t_step)
 
         self._slot_caches = caches
+        return sorted(done, key=lambda r: r.rid)
+
+    def _run_paged(self) -> List[Request]:
+        """The paged scheduler loop: page-aware admission, prefix-hit
+        suffix ingest through the forced-token queue, preempt-to-free
+        under deadline pressure, page release on completion."""
+        if self._slot_caches is None:
+            self._slot_caches = self._init_slot_caches()
+        # decode/admit programs donate the cache buffers — drop the handle
+        # so an abnormal exit re-allocates instead of poisoning the engine
+        st = {
+            "caches": self._slot_caches,
+            "cur": jnp.full((self.max_batch,), PAD_TOKEN, jnp.int32),
+            "active": jnp.zeros((self.max_batch,), bool),
+            "eos": jnp.full((self.max_batch,), -1, jnp.int32),
+            "budget": jnp.zeros((self.max_batch,), jnp.int32),
+            "forced": jnp.zeros((self.max_batch, self.cache_len), jnp.int32),
+            "flen": jnp.zeros((self.max_batch,), jnp.int32),
+            "fptr": jnp.zeros((self.max_batch,), jnp.int32),
+        }
+        self._slot_caches = None
+        done: List[Request] = []
+        pending = self._queue
+        self._queue = []
+        slots: List[Optional[Request]] = [None] * self.max_batch
+        if not self._ladder_warm:
+            # compile the whole horizon ladder + lane-state programs before
+            # the first request lands by executing them on the empty
+            # (all-inactive) state — semantically a no-op, but a compile
+            # that instead fired mid-serving would stall every resident
+            # lane (the decode-loop analogue of the admission policy's
+            # warm-bucket preference).  The radix tree makes the horizon
+            # schedule state-dependent, so "the warmup pass saw it" does
+            # not cover later passes the way it does for dense slots.
+            for n in self._horizons:
+                toks, cur, active, budget, fptr, caches = \
+                    self._decode_steps_fn(n)(
+                        self.params, st["caches"], st["cur"], st["active"],
+                        st["eos"], st["budget"], st["forced"], st["flen"],
+                        st["fptr"])
+                st.update(caches=caches, cur=cur, active=active,
+                          budget=budget, fptr=fptr)
+            trash_row = jnp.zeros((self.max_pages,), jnp.int32)
+            st["caches"] = self._admit_hit_fn()(st["caches"], 0, trash_row,
+                                                0, trash_row)
+            (st["cur"], st["active"], st["eos"], st["budget"], st["forced"],
+             st["flen"], st["fptr"]) = self._admit_lane_paged_fn()(
+                st["cur"], st["active"], st["eos"], st["budget"],
+                st["forced"], st["flen"], st["fptr"], 0, PAD_TOKEN, -1, 0,
+                jnp.zeros((self.cache_len,), jnp.int32), 0)
+            st["cur"], st["active"] = self._park_lane_fn()(
+                st["cur"], st["active"], 0)
+            self._ladder_warm = True
+        t0 = time.perf_counter()
+        for r in pending:  # latency clocks start at simulated arrival
+            r.t_enqueue = max(r.t_enqueue, t0 + r.t_arrival)
+
+        while pending or any(r is not None for r in slots):
+            now = time.perf_counter() - t0
+            free = [i for i, r in enumerate(slots) if r is None]
+            arrived = [r for r in pending if r.t_arrival <= now]
+            starved = None  # head-of-line request the pool couldn't cover
+            if free and arrived:
+                pick = self.policy.select(
+                    arrived, len(free),
+                    warm=[b for (b, n, _) in self._jit_prefill if n == 1],
+                    now=now)
+                for r in [arrived[p] for p in pick]:
+                    if not free:
+                        break
+                    sl = free[0]
+                    if not self._admit_paged(r, sl, st):
+                        starved = r
+                        break
+                    free.pop(0)
+                    pending.remove(r)
+                    if r.done:  # budget of 1 / instant EOS at admission
+                        done.append(r)
+                        self._release_lane(sl)
+                        self.stats["completed"] += 1
+                    else:
+                        slots[sl] = r
+            if starved is not None and self.policy.deadline is not None \
+                    and self.policy.deadline.overdue(
+                        now - starved.t_arrival):
+                # deadline pressure and no pages: preempt the lane with the
+                # most work left; the starved request is retried next
+                # boundary (often as a prefix hit on the victim's pages)
+                self._preempt(slots, pending, st)
+            if not any(r is not None for r in slots):
+                if starved is not None:  # pool-starved with nothing running
+                    time.sleep(0.0005)   # (eviction frees pages next pass)
+                elif pending:  # idle until the next arrival
+                    wait = min(r.t_arrival for r in pending) \
+                        - (time.perf_counter() - t0)
+                    if wait > 0:
+                        time.sleep(min(wait, 0.005))
+                continue
+
+            remaining = [self._lane_forced[i]
+                         + r.max_new_tokens - len(r.tokens_out)
+                         for i, r in enumerate(slots) if r is not None]
+            n = self._pick_horizon(bool(pending), remaining)
+            t_step = time.perf_counter()
+            toks, cur, active, budget, fptr, caches = \
+                self._decode_steps_fn(n)(
+                    self.params, st["caches"], st["cur"], st["active"],
+                    st["eos"], st["budget"], st["forced"], st["flen"],
+                    st["fptr"])
+            st.update(caches=caches, cur=cur, active=active, budget=budget,
+                      fptr=fptr)
+            self._reconcile_dispatch(toks, slots, done, n, t_step)
+
+        # slot-accounting invariant: when drained, the only live page
+        # references are the radix tree's — anything else is a leak
+        assert all(p is None for p in self._lane_pages), self._lane_pages
+        assert self.pool.pages_in_use == self.prefix_cache.cached_pages, (
+            self.pool.pages_in_use, self.prefix_cache.cached_pages)
+        self._slot_caches = st["caches"]
         return sorted(done, key=lambda r: r.rid)
 
 

@@ -1,0 +1,210 @@
+"""Paged KV: allocator/radix-tree invariants and kernel/oracle equality.
+
+Kernel bar: for random page tables — including pages *shared between
+lanes* (radix prefix reuse) — the paged Pallas kernel (interpret mode,
+real body), the paged jnp oracle, and the dense split-KV path over the
+explicitly gathered cache all agree; on page-aligned logical lengths the
+paged oracle is *bitwise* identical to the dense oracle, which is the
+property the serving engine's stream-equality guarantees stand on.
+
+Pool bar: pages never leak — refcounts across lanes and the radix tree
+reconcile to zero when everything releases, eviction only frees
+tree-exclusive pages, and lookups never hand out a prompt's final token.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback draws (see detshim.py)
+    from detshim import given, settings
+    import detshim as st
+
+from repro.core.packing import PagePool, RadixPrefixCache
+from repro.kernels import ops
+
+SENTINEL = 2 ** 30
+
+
+# ---------------------------------------------------------------------------
+# paged flash-decode vs oracles
+# ---------------------------------------------------------------------------
+
+
+def _mk_paged(rng, b, h, kvh, hd, n_pages, ps, maxp, share=True,
+              dtype=jnp.float32):
+    """Random arena + per-lane tables; lanes may share table entries."""
+    q = jnp.asarray(rng.normal(0, 1, (b, h, hd)), dtype) * (hd ** -0.5)
+    k = jnp.asarray(rng.normal(0, 1, (n_pages, ps, kvh, hd)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (n_pages, ps, kvh, hd)), dtype)
+    # page j of any lane holds positions [j*ps, (j+1)*ps): kpos per arena
+    # page is consistent for every logical depth it may appear at only if
+    # tables agree on depth — build depth-consistent tables like the
+    # engine's allocator does (a shared page is a shared *prefix* page)
+    kpos = np.full((n_pages, ps), SENTINEL, np.int64)
+    pt = np.zeros((b, maxp), np.int32)
+    next_page = 1  # page 0 = trash (all sentinel)
+    shared = {}
+    for lane in range(b):
+        for j in range(maxp):
+            if share and j in shared and rng.random() < 0.5:
+                pt[lane, j] = shared[j]  # prefix page shared across lanes
+            else:
+                page = next_page
+                next_page += 1
+                assert page < n_pages
+                pt[lane, j] = page
+                shared.setdefault(j, page)
+                kpos[page] = j * ps + np.arange(ps)
+    qpos = jnp.asarray(rng.integers(ps, maxp * ps, b), jnp.int32)
+    return (q, k, v, jnp.asarray(kpos, jnp.int32), jnp.asarray(pt), qpos)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([(4, 4), (8, 2), (6, 3)]),
+       st.sampled_from([(8, 3), (16, 2), (8, 5)]))
+@settings(max_examples=12, deadline=None)
+def test_paged_decode_interpret_matches_ref(seed, heads, paging):
+    """Pallas paged kernel (interpret) == gather oracle, shared pages
+    included."""
+    h, kvh = heads
+    ps, maxp = paging
+    rng = np.random.default_rng(seed)
+    b, hd = 3, 16
+    n_pages = 1 + b * maxp + 1
+    q, k, v, kpos, pt, qpos = _mk_paged(rng, b, h, kvh, hd, n_pages, ps,
+                                        maxp)
+    got = ops.paged_flash_decode(q, k, v, kpos, pt, qpos, impl="interpret")
+    want = ops.paged_flash_decode(q, k, v, kpos, pt, qpos, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_paged_ref_bitwise_equals_dense_ref(seed):
+    """Gathering the pages into a dense per-lane cache and running the
+    dense oracle is *bitwise* what the paged oracle computes — the
+    foundation of paged-vs-dense engine stream equality."""
+    rng = np.random.default_rng(seed)
+    b, h, kvh, hd, ps, maxp = 2, 4, 2, 16, 8, 4
+    n_pages = 1 + b * maxp
+    q, k, v, kpos, pt, qpos = _mk_paged(rng, b, h, kvh, hd, n_pages, ps,
+                                        maxp)
+    paged = ops.paged_flash_decode(q, k, v, kpos, pt, qpos, impl="ref")
+    kg = jnp.asarray(np.asarray(k)[np.asarray(pt)].reshape(b, -1, kvh, hd))
+    vg = jnp.asarray(np.asarray(v)[np.asarray(pt)].reshape(b, -1, kvh, hd))
+    kpg = jnp.asarray(np.asarray(kpos)[np.asarray(pt)].reshape(b, -1))
+    dense = ops.flash_decode(q, kg, vg, kpg, qpos, impl="ref")
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+
+def test_paged_decode_inactive_and_sentinel_rows():
+    """Inactive lanes and all-sentinel (never written / trash) pages give
+    exact zeros, never NaN, in both impls."""
+    rng = np.random.default_rng(7)
+    b, h, kvh, hd, ps, maxp = 3, 4, 2, 16, 8, 3
+    q, k, v, kpos, pt, qpos = _mk_paged(rng, b, h, kvh, hd, 1 + b * maxp,
+                                        ps, maxp)
+    pt = pt.at[2].set(0)  # lane 2's whole table points at the trash page
+    active = jnp.asarray([True, False, True])
+    for impl in ("ref", "interpret"):
+        out = np.asarray(ops.paged_flash_decode(q, k, v, kpos, pt, qpos,
+                                                active=active, impl=impl))
+        assert not np.isnan(out).any(), impl
+        np.testing.assert_array_equal(out[1], 0.0)  # inactive
+        np.testing.assert_array_equal(out[2], 0.0)  # all-sentinel pages
+
+
+def test_paged_decode_trash_page_garbage_is_unreachable():
+    """Garbage k/v in the trash page (inactive lanes scatter there) must
+    not perturb live lanes as long as its kpos stay sentinel."""
+    rng = np.random.default_rng(11)
+    b, h, kvh, hd, ps, maxp = 2, 4, 2, 16, 8, 3
+    q, k, v, kpos, pt, qpos = _mk_paged(rng, b, h, kvh, hd, 1 + b * maxp,
+                                        ps, maxp)
+    clean = ops.paged_flash_decode(q, k, v, kpos, pt, qpos, impl="ref")
+    k2 = k.at[0].set(1e9)
+    v2 = v.at[0].set(-1e9)
+    dirty = ops.paged_flash_decode(q, k2, v2, kpos, pt, qpos, impl="ref")
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(dirty))
+
+
+# ---------------------------------------------------------------------------
+# PagePool / RadixPrefixCache
+# ---------------------------------------------------------------------------
+
+
+def test_page_pool_alloc_refcount_free():
+    pool = PagePool(num_pages=8, page_size=4)
+    assert pool.free_pages == 7  # page 0 reserved (trash)
+    a = pool.alloc(3)
+    assert pool.pages_in_use == 3 and 0 not in a
+    pool.incref(a)
+    assert pool.decref(a) == []          # still referenced once
+    assert sorted(pool.decref(a)) == sorted(a)  # now free
+    assert pool.pages_in_use == 0
+    with pytest.raises(MemoryError):
+        pool.alloc(8)
+    assert pool.pages_for(1) == 1 and pool.pages_for(9) == 3
+
+
+def test_radix_lookup_caps_at_prompt_minus_one():
+    """A full-prompt hit would leave nothing to run the first forward pass
+    on; the final token is never handed out."""
+    pool = PagePool(num_pages=8, page_size=4)
+    rc = RadixPrefixCache(pool)
+    prompt = np.arange(8, dtype=np.int32)
+    pages = pool.alloc(2)
+    rc.insert(prompt, pages)
+    hit, hlen = rc.lookup(prompt)  # identical prompt
+    assert hlen == 4 and hit == pages[:1]
+    pool.decref(hit)
+    pool.decref(pages)
+
+
+def test_radix_shared_prefix_hit_and_eviction():
+    pool = PagePool(num_pages=12, page_size=4)
+    rc = RadixPrefixCache(pool)
+    prompt_a = np.concatenate([np.arange(8), [50, 51]]).astype(np.int32)
+    pages_a = pool.alloc(3)
+    rc.insert(prompt_a, pages_a)  # registers the 2 full pages
+    assert rc.cached_pages == 2
+    prompt_b = np.concatenate([np.arange(8), [60, 61, 62]]).astype(np.int32)
+    hit, hlen = rc.lookup(prompt_b)
+    assert hlen == 8 and hit == pages_a[:2]
+    # a page held by a "lane" (the lookup ref) is not evictable
+    assert rc.evict(10) == 0
+    pool.decref(hit)
+    pool.decref(pages_a)
+    # now only tree refs remain: eviction frees exactly the cached pages
+    assert rc.evict(10) == 2
+    assert pool.pages_in_use == 0 and rc.cached_pages == 0
+
+
+def test_radix_insert_only_full_pages():
+    pool = PagePool(num_pages=8, page_size=4)
+    rc = RadixPrefixCache(pool)
+    prompt = np.arange(7, dtype=np.int32)  # one full page + a partial
+    pages = pool.alloc(2)
+    assert rc.insert(prompt, pages) == 1   # the partial page is private
+    assert rc.cached_pages == 1
+    pool.decref(pages)
+
+
+def test_radix_lru_eviction_order():
+    pool = PagePool(num_pages=8, page_size=2)
+    rc = RadixPrefixCache(pool)
+    old = pool.alloc(1)
+    new = pool.alloc(1)
+    rc.insert(np.asarray([1, 2], np.int32), old)
+    rc.insert(np.asarray([3, 4], np.int32), new)
+    pool.decref(old)
+    pool.decref(new)
+    hit, _ = rc.lookup(np.asarray([3, 4, 9], np.int32))  # refresh `new`
+    pool.decref(hit)
+    freed = rc.evict(1)
+    assert freed == 1
+    # the untouched (LRU) entry went first
+    assert pool.refcount(old[0]) == 0 and pool.refcount(new[0]) == 1

@@ -75,9 +75,12 @@ def test_batched_serving_matches_forward(arch, engine_cls, ref_impl):
         assert exp == r.tokens_out, (r.rid, exp, r.tokens_out)
 
 
-def test_continuous_matches_wave_token_streams():
+def test_continuous_matches_wave_token_streams(ref_impl):
     """Same request set, mixed budgets spanning several admission cycles:
-    the slot engine's outputs must be identical to the wave engine's."""
+    the slot engine's outputs must be identical to the wave engine's.
+    (ref-pinned: the continuous engine runs the paged arena while the wave
+    baseline decodes dense slots — cross-layout equality is exact only
+    under one attention formulation, docs/perf.md §impl selection.)"""
     cfg, model, params = _setup()
     rng = np.random.default_rng(3)
     prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
@@ -250,10 +253,11 @@ def test_serve_plan_shardings_applied():
         jax.eval_shape(lambda: eng._slot_caches), batch=eng.max_batch,
         slot_table=True)
     walk(cache_specs, eng._slot_caches)
-    # and outputs are unchanged by placement
+    # and outputs are unchanged by placement (paged off: the comparison
+    # isolates plan placement, so both engines must share the dense path)
     rng = np.random.default_rng(0)
     bare = ContinuousBatchingEngine(model, params, max_batch=2,
-                                    buckets=(16,))
+                                    buckets=(16,), paged=False)
     bare.submit(Request(rid=0, prompt=rng.integers(
         0, cfg.vocab_size, 5).astype(np.int32), max_new_tokens=3))
     assert done[0].tokens_out == bare.run()[0].tokens_out
@@ -313,6 +317,145 @@ def test_admission_policy_deadline_and_warm_buckets():
                            deadline=AdmissionDeadline(0.0))
     waiting = [req(0, 20, 0.0), req(1, 5, 0.0)]
     assert fifo.select(waiting, 2, warm=[16], now=0.0) == [0, 1]
+
+
+def test_paged_auto_eligibility():
+    """paged='auto' turns the arena on for all-attention configs and off
+    for recurrent/hybrid ones and under a ClusterPlan; forcing it on an
+    ineligible config raises."""
+    cfg, model, params = _setup()
+    assert ContinuousBatchingEngine(model, params, max_batch=2,
+                                    buckets=(16,)).paged
+    cfg_r, model_r, params_r = _setup("recurrentgemma-2b")
+    eng = ContinuousBatchingEngine(model_r, params_r, max_batch=2,
+                                   buckets=(16,))
+    assert not eng.paged
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(model_r, params_r, max_batch=2,
+                                 buckets=(16,), paged=True)
+
+
+def test_paged_matches_dense_slots_token_streams(ref_impl):
+    """Tentpole acceptance: the paged engine's streams are bit-identical
+    to the dense-slot engine's on a mixed stream (one pinned impl; the
+    gathered paged layout equals the dense slot layout row for row)."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 14, 9, 3, 11, 7, 12, 6)]
+    budgets = [3, 8, 1, 6, 2, 7, 4, 5]
+
+    def run(paged):
+        eng = ContinuousBatchingEngine(model, params, max_batch=3,
+                                       buckets=(16, 32), paged=paged)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=budgets[i]))
+        return {r.rid: r.tokens_out for r in eng.run()}, eng
+
+    out_d, _ = run(False)
+    out_p, eng = run(True)
+    assert out_d == out_p
+    # drained engine holds pages only through the radix tree (no leaks)
+    assert eng.stats["pages_in_use"] == eng.prefix_cache.cached_pages
+    assert eng.stats["admitted"] == eng.stats["completed"] == len(prompts)
+
+
+def test_prefix_hit_stream_bit_identical_to_cold(ref_impl):
+    """Satellite acceptance: a prefix-cache hit (prefill skipped, suffix
+    ingested through the forced-token queue) produces a bit-identical
+    token stream to a cold prefill of the same prompt."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(5)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 35).astype(np.int32)
+
+    def reqs():
+        out = []
+        for i in range(4):
+            tail = np.random.default_rng(100 + i).integers(
+                0, cfg.vocab_size, 4).astype(np.int32)
+            out.append(Request(rid=i,
+                               prompt=np.concatenate([sys_prompt, tail]),
+                               max_new_tokens=5))
+        return out
+
+    cold = ContinuousBatchingEngine(model, params, max_batch=2,
+                                    buckets=(48,), paged=False,
+                                    max_decode_len=16)
+    for r in reqs():
+        cold.submit(r)
+    out_cold = {r.rid: r.tokens_out for r in cold.run()}
+
+    warm = ContinuousBatchingEngine(model, params, max_batch=2,
+                                    buckets=(48,), max_decode_len=16)
+    for r in reqs():
+        warm.submit(r)
+    out_warm = {r.rid: r.tokens_out for r in warm.run()}
+    assert out_cold == out_warm
+    # every admission after the first rode the radix cache (35 tokens
+    # cover 2 full 16-token pages) and skipped its prefill
+    assert warm.stats["prefix_hits"] == 3
+    assert warm.stats["prefix_hit_tokens"] == 3 * 32
+    assert warm.stats["prefills"] == 1
+    # a second identical batch is all hits (prompt pages stayed cached)
+    for r in reqs():
+        warm.submit(r)
+    out_again = {r.rid: r.tokens_out for r in warm.run()}
+    assert out_again == out_cold
+    assert warm.stats["prefix_hits"] == 7
+
+
+def test_paged_preemption_no_slot_or_page_leak(ref_impl):
+    """Preempt-to-free: with a pool sized for ~one request, deadline
+    pressure preempts the running lane, the victim is re-queued and still
+    completes with its full budget, and no slots or pages leak."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(6)
+    # pool: 8 usable pages of 4; each request needs ~5 pages, so two can
+    # never run together — the second arrival must starve, then preempt
+    eng = ContinuousBatchingEngine(
+        model, params, max_batch=2, buckets=(8, 16), max_decode_len=8,
+        page_size=4, num_pages=9, deadline_s=0.0)
+    prompts = [rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+               for _ in range(3)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=8))
+    done = eng.run()
+    assert len(done) == 3 and all(r.done for r in done)
+    assert all(len(r.tokens_out) == 8 for r in done)
+    assert eng.stats["completed"] == 3
+    assert eng.stats["preemptions"] >= 1
+    assert all(p is None for p in eng._lane_pages)
+    assert eng.stats["pages_in_use"] == eng.prefix_cache.cached_pages
+    # preempted work is never lost: admissions >= requests, tokens exact
+    assert eng.stats["admitted"] >= 3
+
+
+def test_paged_pool_gates_admission(ref_impl):
+    """Admission is page-aware: a pool of 6 usable pages holds at most two
+    3-page requests at once, the third waits for pages (or preempts), and
+    everyone still completes with exact budgets."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(8)
+    eng = ContinuousBatchingEngine(
+        model, params, max_batch=2, buckets=(8,), max_decode_len=8,
+        page_size=4, num_pages=7)
+    for i in range(3):
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, 6).astype(np.int32), max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 3 and all(len(r.tokens_out) == 4 for r in done)
+    assert eng.stats["pages_peak"] <= 6
+    assert eng.stats["active_lane_steps"] <= 2 * eng.stats["decode_steps"]
+
+
+def test_paged_submit_rejects_oversized_request():
+    cfg, model, params = _setup()
+    eng = ContinuousBatchingEngine(model, params, max_batch=1,
+                                   buckets=(16,), max_decode_len=16,
+                                   page_size=4, num_pages=5)
+    with pytest.raises(ValueError):
+        eng.submit(Request(rid=0, prompt=np.zeros(12, np.int32),
+                           max_new_tokens=8))
 
 
 def test_poisson_arrivals_pace_admission():

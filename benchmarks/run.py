@@ -16,6 +16,10 @@ analytically onto the target part).
   sec9  : v5e int8 roofline estimate of encoder latency (Versal analogue)
   gmi   : collective byte models — composed vs fused vs gateway-hierarchical
   serve_cb: wave vs continuous-batching serving throughput + TTFT (§8.2)
+  serve_paged: paged KV + radix prefix reuse vs dense slots at equal KV HBM
+          (also via ``serve_cb --shared-prefix``)
+  serve_quant: int8 KV-cache pages vs bf16 paged at equal KV HBM + greedy
+          token-match rate (also via ``serve_cb --kv-dtype int8``)
 
 Run everything with no args, or a subset: ``python benchmarks/run.py serve_cb``.
 """
@@ -292,6 +296,35 @@ def serve_cb(state: Dict) -> None:
     }
 
 
+def _measure_cb_engine(eng, stream, reps: int = 3):
+    """Shared serving-engine measurement harness (serve_paged/serve_quant):
+    one unmeasured compile pass, `reps` measured replays, median-by-wall
+    pick.  Returns (median_pass, per-pass stream dicts, core metrics) where
+    median_pass = (done, wall_s, tok_s, ttft_ms list)."""
+    from repro.serving.stream import replay
+
+    replay(eng, stream, warmup=False)  # compile pass
+    disp0 = eng.stats["decode_dispatches"]
+    steps0 = eng.stats["decode_steps"]
+    lanes0 = eng.stats["active_lane_steps"]
+    passes = [replay(eng, stream, warmup=False) for _ in range(reps)]
+    median = sorted(passes, key=lambda p: p[1])[reps // 2]
+    done, wall, tok_s, ttft = median
+    toks = sum(len(r.tokens_out) for r in done)
+    disp_tok = (eng.stats["decode_dispatches"] - disp0) / reps / toks
+    conc = ((eng.stats["active_lane_steps"] - lanes0)
+            / max(eng.stats["decode_steps"] - steps0, 1))
+    metrics = {
+        "tok_s": round(tok_s, 2),
+        "ttft_p50_ms": round(float(np.percentile(ttft, 50)), 3),
+        "ttft_p95_ms": round(float(np.percentile(ttft, 95)), 3),
+        "dispatches_per_token": round(disp_tok, 4),
+        "sustained_concurrency": round(conc, 2),
+    }
+    streams = [{r.rid: tuple(r.tokens_out) for r in p[0]} for p in passes]
+    return median, streams, metrics
+
+
 def serve_paged(state: Dict) -> None:
     """The `--shared-prefix` workload: paged KV + radix prefix reuse vs the
     dense-slot engine at *equal KV HBM* on a shared-system-prompt stream
@@ -308,7 +341,7 @@ def serve_paged(state: Dict) -> None:
     from repro.kernels import ops as kops
     from repro.models.transformer import init_params, make_model
     from repro.serving.engine import ContinuousBatchingEngine
-    from repro.serving.stream import replay, shared_prefix_requests
+    from repro.serving.stream import shared_prefix_requests
 
     cfg = get_config("smollm-135m").reduced()
     model = make_model(cfg, remat=False)
@@ -328,35 +361,15 @@ def serve_paged(state: Dict) -> None:
                        num_pages=kv_rows // page_size + 1)),
     )
     metrics, streams = {}, {}
-    prev_impl = kops._IMPL
-    kops.set_impl("ref")
-    try:
+    with kops.pinned_impl("ref"):
         for name, kw in setups:
             eng = ContinuousBatchingEngine(
                 model, params, buckets=buckets, max_decode_len=max_decode,
                 **kw)
-            replay(eng, stream, warmup=False)  # compile pass
-            disp0 = eng.stats["decode_dispatches"]
-            steps0 = eng.stats["decode_steps"]
-            lanes0 = eng.stats["active_lane_steps"]
-            passes = []
-            for _ in range(3):
-                passes.append(replay(eng, stream, warmup=False))
-            done, wall, tok_s, ttft = sorted(passes, key=lambda p: p[1])[1]
-            streams[name] = [{r.rid: tuple(r.tokens_out) for r in p[0]}
-                             for p in passes]
+            (done, wall, tok_s, ttft), streams[name], metrics[name] = \
+                _measure_cb_engine(eng, stream)
             toks = sum(len(r.tokens_out) for r in done)
-            disp_tok = (eng.stats["decode_dispatches"] - disp0) / 3 / toks
-            conc = ((eng.stats["active_lane_steps"] - lanes0)
-                    / max(eng.stats["decode_steps"] - steps0, 1))
-            metrics[name] = {
-                "tok_s": round(tok_s, 2),
-                "ttft_p50_ms": round(float(np.percentile(ttft, 50)), 3),
-                "ttft_p95_ms": round(float(np.percentile(ttft, 95)), 3),
-                "dispatches_per_token": round(disp_tok, 4),
-                "sustained_concurrency": round(conc, 2),
-                "max_batch": eng.max_batch,
-            }
+            metrics[name]["max_batch"] = eng.max_batch
             if eng.paged:
                 metrics[name].update(
                     prefix_hits=eng.stats["prefix_hits"],
@@ -365,11 +378,10 @@ def serve_paged(state: Dict) -> None:
                     pages_peak=eng.stats["pages_peak"],
                     preemptions=eng.stats["preemptions"])
             row(f"serve_paged_{name}_per_token", wall / toks * 1e6,
-                f"{tok_s:.1f}tok/s conc={conc:.2f} "
+                f"{tok_s:.1f}tok/s "
+                f"conc={metrics[name]['sustained_concurrency']:.2f} "
                 f"ttft_p50={np.percentile(ttft, 50):.1f}ms "
-                f"disp/tok={disp_tok:.3f}")
-    finally:
-        kops._IMPL = prev_impl
+                f"disp/tok={metrics[name]['dispatches_per_token']:.3f}")
     for k in range(3):  # every pass: cold tree on 1, warm prefix cache after
         assert streams["dense_slots"][k] == streams["paged"][k], \
             f"paged stream diverged from dense slots on pass {k}"
@@ -388,6 +400,91 @@ def serve_paged(state: Dict) -> None:
     }
 
 
+def serve_quant(state: Dict) -> None:
+    """The `--kv-dtype int8` axis: quantized KV-cache pages vs the bf16
+    paged engine at *equal KV HBM*.
+
+    int8 pages store ~(hd+4)/(2*hd) of the bf16 bytes per cache row
+    (values at 1 B + one f32 scale per row per kv head), so the same byte
+    budget buys ~1.6-2x the pages — sized here via
+    `serving.engine.kv_page_bytes` — and the int8 engine sustains more
+    resident lanes on a pool-bound stream.  Accuracy is measured as the
+    greedy token-match rate against the bf16 engine's streams
+    (>=0.99 gated): the model is first fitted to the affine-cycle task
+    (models/synthetic.py) because stream agreement is only a meaningful
+    instrument on a model with a confident predictive distribution —
+    random-init top-2 logit gaps cluster at zero and *any* numeric
+    difference, including bf16 summation order, flips tokens.
+    """
+    from repro.configs import get_config
+    from repro.kernels import ops as kops
+    from repro.models.synthetic import affine_prompts, fit_affine_lm
+    from repro.models.transformer import make_model
+    from repro.serving.engine import (
+        ContinuousBatchingEngine, Request, kv_page_bytes,
+    )
+
+    cfg = get_config("smollm-135m").reduced()
+    model = make_model(cfg, remat=False)
+    params = fit_affine_lm(model)  # cached per process; ~1k adam steps
+    rng = np.random.default_rng(0)
+    prompts = affine_prompts(rng, 24, cfg.vocab_size, len_range=(6, 20))
+    buds = rng.integers(16, 48, len(prompts))
+    gaps = rng.exponential(1.0 / 300.0, len(prompts))
+    arrivals = np.cumsum(gaps)
+    stream = [Request(rid=i, prompt=p, max_new_tokens=int(buds[i]),
+                      t_arrival=float(arrivals[i]))
+              for i, p in enumerate(prompts)]
+
+    page_size, bf16_pages = 16, 16  # pool-bound at ~4 resident lanes
+    budget_bytes = bf16_pages * kv_page_bytes(cfg, page_size, "bf16")
+    setups = []
+    for name in ("bf16", "int8"):
+        n_pages = budget_bytes // kv_page_bytes(cfg, page_size, name)
+        setups.append((name, dict(kv_dtype=name, page_size=page_size,
+                                  num_pages=int(n_pages) + 1)))
+    metrics, streams = {}, {}
+    with kops.pinned_impl("ref"):
+        for name, kw in setups:
+            eng = ContinuousBatchingEngine(
+                model, params, max_batch=8, buckets=(32,),
+                max_decode_len=64, **kw)
+            (done, wall, tok_s, ttft), passes, metrics[name] = \
+                _measure_cb_engine(eng, stream)
+            streams[name] = passes[-1]  # greedy: identical across passes
+            toks = sum(len(r.tokens_out) for r in done)
+            metrics[name].update(
+                num_pages=eng.pool.num_pages,
+                pages_peak=eng.stats["pages_peak"],
+                preemptions=eng.stats["preemptions"])
+            row(f"serve_quant_{name}_per_token", wall / toks * 1e6,
+                f"{tok_s:.1f}tok/s "
+                f"conc={metrics[name]['sustained_concurrency']:.2f} "
+                f"pages={eng.pool.num_pages} "
+                f"ttft_p50={np.percentile(ttft, 50):.1f}ms")
+    tot = sum(len(v) for v in streams["bf16"].values())
+    matched = sum(
+        sum(a == b for a, b in zip(streams["bf16"][rid], streams["int8"][rid]))
+        for rid in streams["bf16"])
+    match_rate = matched / max(tot, 1)
+    speedup = metrics["int8"]["tok_s"] / metrics["bf16"]["tok_s"]
+    conc_gain = (metrics["int8"]["sustained_concurrency"]
+                 / max(metrics["bf16"]["sustained_concurrency"], 1e-9))
+    row("serve_quant_int8_vs_bf16_tok_s", speedup,
+        "int8 tok/s over bf16 paged at equal KV HBM (>=1.2 target)")
+    row("serve_quant_int8_vs_bf16_concurrency", conc_gain,
+        "sustained concurrent requests, int8/bf16 (>=1.5 target)")
+    row("serve_quant_token_match_rate", match_rate,
+        f"{matched}/{tot} greedy tokens identical to bf16 (>=0.99 gated)")
+    state.setdefault("bench_json", {})["serve_quant"] = {
+        "engines": metrics,
+        "int8_vs_bf16_tok_s": round(speedup, 3),
+        "int8_vs_bf16_concurrency": round(conc_gain, 3),
+        "token_match_rate": round(match_rate, 4),
+        "equal_kv_hbm_bytes": int(budget_bytes),
+    }
+
+
 BENCHES = {
     "table1": table1_encoder_latency,
     "table2": table2_full_model_eq1,
@@ -400,11 +497,13 @@ BENCHES = {
     "kernels": bench_int8_kernels,
     "serve_cb": serve_cb,
     "serve_paged": serve_paged,
+    "serve_quant": serve_quant,
 }
 
 # benches whose state is produced by earlier benches in the full sweep
 _ORDER = ["table1", "table2", "table3", "table4", "sec9", "table5",
-          "fig15", "gmi", "kernels", "serve_cb", "serve_paged"]
+          "fig15", "gmi", "kernels", "serve_cb", "serve_paged",
+          "serve_quant"]
 _NEEDS = {"table2": ["table1"], "table3": ["table1"],
           "table4": ["table1", "table3"], "table5": ["sec9"]}
 
@@ -419,25 +518,36 @@ _NEEDS = {"table2": ["table1"], "table3": ["table1"],
 TOK_S_REGRESSION = 0.25
 DISP_TOK_INCREASE = 0.10
 RATIO_KEYS = ("paged_vs_dense_tok_s", "paged_vs_dense_concurrency",
-              "fused_vs_single_step_tok_s", "dispatches_per_token_drop")
+              "fused_vs_single_step_tok_s", "dispatches_per_token_drop",
+              "int8_vs_bf16_tok_s", "int8_vs_bf16_concurrency")
+# absolute floor: int8 greedy streams must match bf16 on >=99% of tokens —
+# accuracy is not machine-relative, so no baseline-relative band applies
+TOKEN_MATCH_FLOOR = 0.99
+_GATED_LEAVES = ("tok_s", "dispatches_per_token", "token_match_rate")
 
 
 def _gate_walk(base, cur, path=""):
     """Compare a bench_json tree against a committed baseline; returns a
     list of violation strings (empty = gate passes).  Only the metrics the
-    gate owns are compared — every `tok_s` (lower = regression) and every
-    `dispatches_per_token` (higher = regression); other keys are context."""
+    gate owns are compared — every `tok_s` (lower = regression), every
+    `dispatches_per_token` (higher = regression), the speedup ratios and
+    the absolute `token_match_rate` floor; other keys are context."""
     bad = []
     if isinstance(base, dict):
         for k, v in base.items():
             sub = cur.get(k) if isinstance(cur, dict) else None
             if sub is None and not isinstance(v, dict):
-                if k in ("tok_s", "dispatches_per_token") or k in RATIO_KEYS:
+                if k in _GATED_LEAVES or k in RATIO_KEYS:
                     bad.append(f"{path}{k}: missing from current run")
                 continue
             bad += _gate_walk(v, sub, f"{path}{k}.")
         return bad
     key = path.rstrip(".").rsplit(".", 1)[-1]
+    if not isinstance(cur, (int, float)) or isinstance(cur, bool):
+        if key in _GATED_LEAVES or key in RATIO_KEYS:
+            bad.append(f"{path.rstrip('.')}: non-numeric value {cur!r} "
+                       f"in current run (baseline {base})")
+        return bad
     if key == "tok_s" or key in RATIO_KEYS:
         floor = base * (1 - TOK_S_REGRESSION)
         if cur < floor:
@@ -448,16 +558,51 @@ def _gate_walk(base, cur, path=""):
         if cur > ceil:
             bad.append(f"{path.rstrip('.')}: {cur} > {ceil:.4f} "
                        f"(baseline {base}, +{DISP_TOK_INCREASE:.0%} ceiling)")
+    elif key == "token_match_rate":
+        if cur < TOKEN_MATCH_FLOOR:
+            bad.append(f"{path.rstrip('.')}: {cur} < {TOKEN_MATCH_FLOOR} "
+                       f"(absolute accuracy floor; baseline {base})")
     return bad
 
 
+def _gated_paths(tree, path=""):
+    """Dotted paths of every gate-owned metric in a bench_json tree."""
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out += _gated_paths(v, f"{path}{k}.")
+            elif k in _GATED_LEAVES or k in RATIO_KEYS:
+                out.append(f"{path}{k}")
+    return out
+
+
 def check_against(baseline_path: str, bench_json: Dict) -> int:
-    """Exit-code-style perf gate: 0 = within thresholds, 1 = regression."""
+    """Exit-code-style perf gate: 0 = within thresholds, 1 = regression.
+
+    Fails with an explicit message — never a KeyError — when the baseline
+    and the current run disagree on *which* gated metrics exist: a metric
+    the baseline expects but the run didn't produce is a regression, and a
+    gated metric the run produced but the baseline has never seen (e.g.
+    the first run after adding a benchmark axis) means the committed
+    baseline must be refreshed before the gate can vouch for it.
+    """
     import json
     with open(baseline_path) as f:
         base = json.load(f)
     base.pop("rows", None)
     base.pop("_meta", None)
+    missing = sorted(set(_gated_paths(bench_json)) - set(_gated_paths(base)))
+    if missing:
+        print(f"PERF GATE UNUSABLE: {baseline_path} has no entry for "
+              f"gated metric(s) produced by this run:")
+        for m in missing:
+            print(f"  MISSING BASELINE KEY {m}")
+        print("refresh the committed baseline (CI: the baseline-refresh "
+              "workflow_dispatch job; locally: `python benchmarks/run.py "
+              "serve_cb --shared-prefix --kv-dtype int8 --write-baseline "
+              "benchmarks/baseline.json` on a quiet box) and commit it")
+        return 1
     bad = _gate_walk(base, bench_json)
     if bad:
         print(f"PERF GATE FAILED vs {baseline_path}:")
@@ -480,19 +625,24 @@ def main(argv=None) -> None:
         try:
             p = args[i + 1]
         except IndexError:
-            raise SystemExit(f"{flag} requires a file path")
+            raise SystemExit(f"{flag} requires a value")
         del args[i:i + 2]
         return p
 
     json_path = _path_flag("--json")  # machine-readable perf trajectory
     check_path = _path_flag("--check-against")  # perf-regression gate
     write_baseline = _path_flag("--write-baseline")
+    kv_dtype = _path_flag("--kv-dtype")  # int8: add the quantized workload
+    if kv_dtype not in (None, "bf16", "int8"):
+        raise SystemExit(f"--kv-dtype must be bf16 or int8, got {kv_dtype}")
     shared_prefix = "--shared-prefix" in args
     if shared_prefix:  # serve_cb --shared-prefix: add the paged workload
         args.remove("--shared-prefix")
     names = args or list(_ORDER)
     if shared_prefix and "serve_paged" not in names:
         names.append("serve_paged")
+    if kv_dtype == "int8" and "serve_quant" not in names:
+        names.append("serve_quant")
     unknown = [n for n in names if n not in BENCHES]
     if unknown:  # fail before running anything — compiles cost minutes
         raise SystemExit(
@@ -518,11 +668,14 @@ def main(argv=None) -> None:
         payload = dict(bench_json, _meta={
             "note": "perf-gate baseline; regenerate ON A QUIET BOX OF THE "
                     "CI RUNNER CLASS with `python benchmarks/run.py "
-                    "serve_cb --shared-prefix --write-baseline "
-                    "benchmarks/baseline.json` (absolute tok_s is "
-                    "machine-relative; the speedup ratios transfer)",
+                    "serve_cb --shared-prefix --kv-dtype int8 "
+                    "--write-baseline benchmarks/baseline.json` — or one "
+                    "click via the baseline-refresh workflow_dispatch job "
+                    "(absolute tok_s is machine-relative; the speedup "
+                    "ratios and token_match_rate transfer)",
             "gate": {"tok_s_regression": TOK_S_REGRESSION,
                      "dispatches_per_token_increase": DISP_TOK_INCREASE,
+                     "token_match_floor": TOKEN_MATCH_FLOOR,
                      "ratio_keys": list(RATIO_KEYS)}})
         with open(write_baseline, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

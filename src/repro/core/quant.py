@@ -91,6 +91,30 @@ def int8_matmul_ref(a: QTensor, b: QTensor, scale_out: Optional[jax.Array] = Non
     return QTensor(requantize(acc, scale_acc, scale_out), scale_out)
 
 
+def kv_quantize(x: jax.Array, bits: int = 8):
+    """Per-row symmetric int8 over the last axis for KV-cache storage.
+
+    x: (..., hd) float; returns (int8 values of x.shape, f32 scales of
+    x.shape[:-1]).  One scale per cache row per kv head keeps the
+    quantization error independent across positions — a page shared by
+    many lanes (radix prefix reuse) carries its scales *in the arena*, so
+    every reader dequantizes identically and prefix-hit streams stay
+    bit-identical to cold prefills.  Round-half-away matches `quantize`
+    (and the I-BERT hardware), so |x - dequant| <= scale/2 elementwise.
+    """
+    qmax = 2.0 ** (bits - 1) - 1
+    xf = x.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1), 1e-8)
+    s = amax / qmax
+    q = jnp.clip(_round_half_away(xf / s[..., None]), -qmax, qmax)
+    return q.astype(jnp.int8), s
+
+
+def kv_dequantize(q: jax.Array, s: jax.Array) -> jax.Array:
+    """Inverse of `kv_quantize`: (..., hd) int8 + (...,) f32 -> f32."""
+    return q.astype(jnp.float32) * s[..., None]
+
+
 def fake_quant(x: jax.Array, axis: Optional[int] = None, bits: int = 8) -> jax.Array:
     """Quantize-dequantize (used for QAT-style parity checks)."""
     q = quantize(x, axis=axis, bits=bits)

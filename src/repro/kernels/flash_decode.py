@@ -139,6 +139,113 @@ def _paged_kernel(pt_ref, qpos_ref, active_ref, q_ref, k_ref, v_ref,
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_kernel_q(pt_ref, qpos_ref, active_ref, q_ref, k_ref, v_ref,
+                    ks_ref, vs_ref, kpos_ref, o_ref, m_ref, l_ref, acc_ref,
+                    *, n_p: int):
+    """`_paged_kernel` over an *int8* KV arena: the page named by pt[b, j]
+    arrives as int8 k/v tiles plus their per-row f32 scales, and the tiles
+    are dequantized in VMEM right before the dots — HBM moves ~half the
+    bytes of the bf16 arena (int8 values + one f32 scale per row per kv
+    head) while the online-softmax recurrence is unchanged and stays f32."""
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+    # (ps, hd) int8 * (ps, 1) f32 scale -> dequantized page tile in VMEM;
+    # the scales ride the same page-table indirection as kpos, so a
+    # radix-shared page dequantizes identically for every lane reading it
+    k = k_ref[0, :, 0, :].astype(jnp.float32) * ks_ref[0]  # (ps, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32) * vs_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (G, ps)
+
+    qpos = qpos_ref[0, 0]
+    kpos = kpos_ref[0]  # (ps,) absolute positions; 2^30 = never written
+    msk = kpos[None, :] <= qpos  # causal; also rejects the sentinel
+    msk &= active_ref[0, 0] != 0
+
+    s = jnp.where(msk, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(msk, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_ref[...] * alpha + pv
+
+    @pl.when(j == n_p - 1)
+    def _epilogue():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_flash_decode_q(q: jax.Array, k: jax.Array, v: jax.Array,
+                         k_scale: jax.Array, v_scale: jax.Array,
+                         kpos: jax.Array, page_table: jax.Array,
+                         qpos: jax.Array, active: jax.Array, *,
+                         interpret: bool = False) -> jax.Array:
+    """Split-KV decode over a *quantized* (int8) paged KV arena.
+
+    Same contract as `paged_flash_decode` except k/v are int8 arenas and
+    k_scale/v_scale: (P, ps, KVH) f32 carry one symmetric scale per cache
+    row per kv head (core/quant.kv_quantize).  Scales are fetched through
+    the same scalar-prefetched page-table indirection as the kpos plane,
+    and the tiles are dequantized in VMEM just before the dots, so the
+    kernel's HBM traffic is the int8 bytes + scales — ~half the bf16
+    arena's — while the softmax recurrence runs in f32 exactly like the
+    unquantized kernel.
+    """
+    b, kvh, g, hd = q.shape
+    ps = k.shape[1]
+    maxp = page_table.shape[1]
+    grid = (b, kvh, maxp)
+    kern = functools.partial(_paged_kernel_q, n_p=maxp)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j, pt: (b, 0),
+                         memory_space=pltpu.SMEM),  # qpos
+            pl.BlockSpec((1, 1), lambda b, h, j, pt: (b, 0),
+                         memory_space=pltpu.SMEM),  # active
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, j, pt: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, j, pt: (pt[b, j], 0, h, 0)),  # k int8
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, j, pt: (pt[b, j], 0, h, 0)),  # v int8
+            pl.BlockSpec((1, ps, 1),
+                         lambda b, h, j, pt: (pt[b, j], 0, h)),  # k_scale
+            pl.BlockSpec((1, ps, 1),
+                         lambda b, h, j, pt: (pt[b, j], 0, h)),  # v_scale
+            pl.BlockSpec((1, ps), lambda b, h, j, pt: (pt[b, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd),
+                               lambda b, h, j, pt: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),   # running max m
+            pltpu.VMEM((g, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((g, hd), jnp.float32),  # output accumulator
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), q.dtype),
+        interpret=interpret,
+    )(page_table, qpos, active, q, k, v, k_scale, v_scale, kpos)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                        kpos: jax.Array, page_table: jax.Array,

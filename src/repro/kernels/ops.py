@@ -9,6 +9,7 @@ NUM_PE there) and the padding is stripped from the result.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional
 
@@ -42,6 +43,21 @@ def set_impl(impl: str) -> None:
     global _IMPL
     assert impl in ("pallas", "interpret", "ref")
     _IMPL = impl
+
+
+@contextlib.contextmanager
+def pinned_impl(impl: str):
+    """Pin the process-wide impl inside a block, restoring the previous
+    value (including the unresolved None) on exit — the benches and tests
+    that compare token streams across engines pin one impl on both sides
+    (docs/perf.md §impl selection)."""
+    global _IMPL
+    prev = _IMPL
+    set_impl(impl)
+    try:
+        yield
+    finally:
+        _IMPL = prev
 
 
 # interpret mode replays the grid at trace time (one kernel-body trace per
@@ -247,6 +263,48 @@ def paged_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
            else active.astype(jnp.int32).reshape(b, 1))
     out = _fd.paged_flash_decode(
         qg, k, v, kpos.astype(jnp.int32), page_table.astype(jnp.int32),
+        qpos.astype(jnp.int32).reshape(b, 1), act,
+        interpret=impl == "interpret")
+    return out[:, :, :g].reshape(b, h, hd)
+
+
+def paged_flash_decode_q(q: jax.Array, k: jax.Array, v: jax.Array,
+                         k_scale: jax.Array, v_scale: jax.Array,
+                         kpos: jax.Array, page_table: jax.Array,
+                         qpos: jax.Array,
+                         active: Optional[jax.Array] = None,
+                         impl: Optional[str] = None) -> jax.Array:
+    """Single-query decode attention over a *quantized* (int8) paged arena.
+
+    Same contract as `paged_flash_decode` with k/v int8 and
+    k_scale/v_scale: (P, ps, KVH) f32 per-row per-kv-head symmetric scales
+    (core/quant.kv_quantize).  Scales live in the arena and are gathered
+    through the same page-table indirection as kpos, so radix-shared
+    prefix pages dequantize identically for every lane that names them.
+    Dequantization happens inside the kernel (VMEM) / oracle (f32), and
+    the result is cast back to q.dtype here so both impls return the same
+    dtype the unquantized path would.
+    """
+    impl = impl or default_impl()
+    assert k.dtype == jnp.int8 and v.dtype == jnp.int8, (k.dtype, v.dtype)
+    if impl == "ref":
+        out = _ref.paged_flash_decode_q(q, k, v, k_scale, v_scale, kpos,
+                                        page_table, qpos, active=active)
+        return out.astype(q.dtype)
+    from repro.kernels import flash_decode as _fd
+
+    b, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    gp = _rup(g, 8)  # group dim is the sublane axis: pad to tile granularity
+    if gp != g:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - g), (0, 0)))
+    act = (jnp.ones((b, 1), jnp.int32) if active is None
+           else active.astype(jnp.int32).reshape(b, 1))
+    out = _fd.paged_flash_decode_q(
+        qg, k, v, k_scale.astype(jnp.float32), v_scale.astype(jnp.float32),
+        kpos.astype(jnp.int32), page_table.astype(jnp.int32),
         qpos.astype(jnp.int32).reshape(b, 1), act,
         interpret=impl == "interpret")
     return out[:, :, :g].reshape(b, h, hd)

@@ -106,6 +106,38 @@ def paged_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return flash_decode(q, kg, vg, kpg, qpos, active=active)
 
 
+def paged_flash_decode_q(q: jax.Array, k: jax.Array, v: jax.Array,
+                         k_scale: jax.Array, v_scale: jax.Array,
+                         kpos: jax.Array, page_table: jax.Array,
+                         qpos: jax.Array,
+                         active: Optional[jax.Array] = None) -> jax.Array:
+    """Oracle for the *quantized* paged decode kernel: gather int8 pages
+    and their scales through the table, dequantize to f32
+    (core/quant.kv_dequantize — bitwise the kernel's in-VMEM dequant),
+    then run the dense decode oracle.
+
+    k/v: (P, ps, KVH, hd) int8 arenas; k_scale/v_scale: (P, ps, KVH) f32
+    per-row per-kv-head scales (shared prefix pages share scales by
+    construction — they live in the arena, not per lane).  The dequantized
+    values stay f32 through the dots, matching the kernel body, so the two
+    impls agree to float tolerance and lanes sharing pages see identical
+    keys.
+    """
+    from repro.core.quant import kv_dequantize
+
+    b = q.shape[0]
+    kvh, hd = k.shape[2], k.shape[3]
+    kg = kv_dequantize(k[page_table], k_scale[page_table]).reshape(
+        b, -1, kvh, hd)
+    vg = kv_dequantize(v[page_table], v_scale[page_table]).reshape(
+        b, -1, kvh, hd)
+    kpg = kpos[page_table].reshape(b, -1)
+    # q joins the dequantized values in f32 so the PV dot runs f32 like the
+    # kernel body (ops.py casts the result back to q.dtype)
+    return flash_decode(q.astype(jnp.float32), kg, vg, kpg, qpos,
+                        active=active)
+
+
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True,
                     segment_ids: Optional[jax.Array] = None) -> jax.Array:

@@ -54,6 +54,14 @@ def main(argv=None):
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV page-pool size (0 = match the dense slot "
                          "table's capacity)")
+    ap.add_argument("--kv-dtype", choices=["bf16", "int8"], default="bf16",
+                    help="paged KV-cache storage dtype; int8 stores "
+                         "quantized pages (+ per-row scales) at ~half the "
+                         "HBM per token (docs/serving.md §kv_dtype)")
+    ap.add_argument("--quant-weights", action="store_true",
+                    help="serve W8A8: projections/MLP run int8 x int8 -> "
+                         "int32 (models/quantized.py); with --kv-dtype "
+                         "int8 the decode loop is integer-dominant")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -62,6 +70,22 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = make_model(cfg, remat=False)
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    if args.kv_dtype == "int8" and args.engine != "cb":
+        raise SystemExit(
+            "serve: --kv-dtype int8 needs the continuous-batching engine "
+            "(the wave baseline decodes dense slot rows, which have no "
+            "quantized variant); drop --engine wave")
+    if args.kv_dtype == "int8" and not args.no_plan:
+        # int8 KV rides the paged pool, which doesn't compose with plan
+        # sharding (slot tables do); same restriction paged="auto" applies
+        print("serve: --kv-dtype int8 implies --no-plan (paged KV pool)")
+        args.no_plan = True
+    if args.quant_weights and not args.no_plan:
+        # plan.param_specs are derived from the bf16 leaf tree; the
+        # quantized {"q","s"} leaves have no specs yet (engine raises)
+        print("serve: --quant-weights implies --no-plan (param specs "
+              "cover the bf16 leaf tree only)")
+        args.no_plan = True
     plan = None
     if not args.no_plan:
         n_dev = jax.device_count()
@@ -73,11 +97,13 @@ def main(argv=None):
     kw = {}
     if cls is ContinuousBatchingEngine:
         kw["page_size"] = args.page_size
+        kw["kv_dtype"] = args.kv_dtype
         if args.num_pages:
             kw["num_pages"] = args.num_pages
     engine = cls(model, params, max_batch=args.max_batch,
                  buckets=(16, 32, 64, 128), plan=plan, monitor=monitor,
-                 decode_horizon=args.decode_horizon, **kw)
+                 decode_horizon=args.decode_horizon,
+                 quant_weights=args.quant_weights, **kw)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()

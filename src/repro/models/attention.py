@@ -291,6 +291,7 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
         b = x.shape[0]
         ck, cv = cache["k"], cache["v"]  # (P, ps, KVH, hd)
         ps = ck.shape[1]
+        quantized = "k_scale" in cache  # int8 arena + per-row scales
         cpos = positions[:, 0].astype(jnp.int32)
         act = (jnp.ones((b,), bool) if active is None
                else active.astype(bool))
@@ -298,25 +299,41 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
         wr_page = jnp.where(act, page, 0)
         wr_off = jnp.where(act, cpos % ps, 0)
         kpos_val = jnp.where(act, cpos, jnp.int32(2 ** 30))
-        ck = ck.at[wr_page, wr_off].set(k[:, 0].astype(ck.dtype))
-        cv = cv.at[wr_page, wr_off].set(v[:, 0].astype(cv.dtype))
-        kpos = cache["kpos"].at[wr_page, wr_off].set(kpos_val)
-        if impl == "pallas" and cfg.causal:
-            # the page-gathering kernel only routes compiled: its grid is
-            # (B, KVH, MAXP) and decode dispatches thousands of times, so
-            # the interpreter's per-program overhead (~8x the jnp gather
-            # at serving shapes) would dominate CPU serving — interpret
-            # CI exercises the kernel body in tests/test_paged_kv.py
-            out = kops.paged_flash_decode(
-                qs[:, 0], ck.astype(q.dtype), cv.astype(q.dtype), kpos,
-                page_table, cpos, active=act, impl=impl)[:, None]
+        if quantized:
+            # the scatter quantizes the new row on the way in: one int8
+            # row + one f32 scale per kv head, same (page, offset) address
+            # as the values — inactive lanes' rows land in the trash page
+            # with sentinel kpos exactly like the bf16 arena's
+            from repro.core.quant import kv_quantize
+            kq, ksc = kv_quantize(k[:, 0])  # (B, KVH, hd) int8, (B, KVH)
+            vq, vsc = kv_quantize(v[:, 0])
+            ck = ck.at[wr_page, wr_off].set(kq)
+            cv = cv.at[wr_page, wr_off].set(vq)
+            cks = cache["k_scale"].at[wr_page, wr_off].set(ksc)
+            cvs = cache["v_scale"].at[wr_page, wr_off].set(vsc)
         else:
-            # jnp fallback: gather-through-the-table oracle (bitwise equal
-            # to the dense ref path on equal logical lengths)
+            ck = ck.at[wr_page, wr_off].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[wr_page, wr_off].set(v[:, 0].astype(cv.dtype))
+        kpos = cache["kpos"].at[wr_page, wr_off].set(kpos_val)
+        # the page-gathering kernels only route compiled: their grid is
+        # (B, KVH, MAXP) and decode dispatches thousands of times, so the
+        # interpreter's per-program overhead (~8x the jnp gather at
+        # serving shapes) would dominate CPU serving — interpret CI
+        # exercises the kernel bodies in tests/test_paged_kv.py and
+        # tests/test_quant_kv.py; the jnp fallback is the gather oracle
+        # (bitwise equal to the dense ref path on equal logical lengths)
+        route = "pallas" if (impl == "pallas" and cfg.causal) else "ref"
+        if quantized:
+            out = kops.paged_flash_decode_q(
+                qs[:, 0], ck, cv, cks, cvs, kpos, page_table, cpos,
+                active=act, impl=route)[:, None]
+            new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
+                         "kpos": kpos}
+        else:
             out = kops.paged_flash_decode(
                 qs[:, 0], ck.astype(q.dtype), cv.astype(q.dtype), kpos,
-                page_table, cpos, active=act, impl="ref")[:, None]
-        new_cache = {"k": ck, "v": cv, "kpos": kpos}
+                page_table, cpos, active=act, impl=route)[:, None]
+            new_cache = {"k": ck, "v": cv, "kpos": kpos}
     else:
         # decode: Sq == 1; the token's absolute position comes from the
         # model-level counter (positions[:, 0]) — the cache itself is
@@ -357,7 +374,7 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
 
 
 def init_paged_attn_cache(cfg, num_pages: int, page_size: int,
-                          dtype=COMPUTE_DTYPE):
+                          dtype=COMPUTE_DTYPE, quantized: bool = False):
     """Paged KV arena: a global page pool instead of per-lane slot rows.
 
     No batch axis — lanes address the arena through their page tables, and
@@ -366,15 +383,24 @@ def init_paged_attn_cache(cfg, num_pages: int, page_size: int,
     sentinel everywhere (including the reserved trash page 0), and the
     serving engine re-sentinels a page's kpos on reallocation, so a page's
     previous occupant is unreachable by construction.
+
+    quantized=True stores int8 k/v plus per-row per-kv-head f32 scale
+    planes (`k_scale`/`v_scale`, core/quant.kv_quantize): ~half the bytes
+    per cache row, so a fixed HBM budget holds ~2x the pages.  The scales
+    live in the arena — a radix-shared prefix page carries its scales with
+    it, so every lane reading the page dequantizes identically.
     """
     assert not cfg.local_window, "paged KV does not support sliding windows"
-    return {
-        "k": jnp.zeros((num_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
-                       dtype),
-        "v": jnp.zeros((num_pages, page_size, cfg.n_kv_heads, cfg.head_dim),
-                       dtype),
+    kv_shape = (num_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    cache = {
+        "k": jnp.zeros(kv_shape, jnp.int8 if quantized else dtype),
+        "v": jnp.zeros(kv_shape, jnp.int8 if quantized else dtype),
         "kpos": jnp.full((num_pages, page_size), 2**30, jnp.int32),
     }
+    if quantized:
+        cache["k_scale"] = jnp.zeros(kv_shape[:3], jnp.float32)
+        cache["v_scale"] = jnp.zeros(kv_shape[:3], jnp.float32)
+    return cache
 
 
 def init_attn_cache(cfg, batch: int, seq_len: int, dtype=COMPUTE_DTYPE):

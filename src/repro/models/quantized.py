@@ -57,9 +57,15 @@ def is_quantized(w: Any) -> bool:
 def qdense(x: jax.Array, w: Dict[str, jax.Array]) -> jax.Array:
     """dynamic-A8 x static-W8 -> int32 -> bf16 (per-tensor act scale).
 
+    On TPU the GEMM routes through the Pallas `int8_matmul` kernel (VMEM
+    int32 accumulator tile across the K loop — the paper's Linear module);
+    elsewhere it stays the jnp int8 `dot_general` with the identical
+    INT8xINT8->INT32 contract (the kernel's oracle), because the
+    interpreter's per-program replay would dominate CPU decode dispatches.
     The int8 operand and int32 accumulator are pinned batch-sharded /
     feature-sharded: SPMD's int8 dot partitioning is weaker than f32/bf16
     and gathers operands without the constraints (§Perf C2b)."""
+    from repro.kernels import ops as kops
     from repro.models.shard_hints import hint
 
     ax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-8)
@@ -68,10 +74,16 @@ def qdense(x: jax.Array, w: Dict[str, jax.Array]) -> jax.Array:
                   ).astype(jnp.int8)
     if x8.ndim == 3:
         x8 = hint(x8, "btd")
-    acc = jax.lax.dot_general(
-        x8, w["q"],
-        (((x.ndim - 1,), (w["q"].ndim - 2,)), ((), ())),
-        preferred_element_type=jnp.int32)
+    if kops.default_impl() == "pallas":
+        x2 = x8.reshape(-1, x8.shape[-1])
+        acc = kops.int8_matmul(x2, w["q"], jnp.float32(1.0),
+                               jnp.float32(1.0), impl="pallas")
+        acc = acc.reshape(x8.shape[:-1] + (w["q"].shape[-1],))
+    else:
+        acc = jax.lax.dot_general(
+            x8, w["q"],
+            (((x.ndim - 1,), (w["q"].ndim - 2,)), ((), ())),
+            preferred_element_type=jnp.int32)
     if acc.ndim == 3:
         acc = hint(acc, "btf")
     return (acc.astype(jnp.float32) * (s_x * w["s"])).astype(jnp.bfloat16)

@@ -156,6 +156,41 @@ def _batch_broadcast(mask: jax.Array, axis: int, ndim: int):
     return mask.reshape(shape)
 
 
+def cache_is_quantized(tree) -> bool:
+    """Does this (sub)tree hold int8 KV arenas (k_scale planes present)?"""
+    if isinstance(tree, dict):
+        if "k_scale" in tree:
+            return True
+        return any(cache_is_quantized(v) for v in tree.values())
+    return False
+
+
+def quantize_kv_tree(tree):
+    """Convert a dense bf16 cache pytree's attention leaves
+    ({"k","v","kpos"}) to the quantized arena leaf layout
+    ({"k": int8, "v": int8, "k_scale", "v_scale", "kpos"}).
+
+    Quantization is per cache row per kv head over head_dim
+    (core/quant.kv_quantize), so it is layout-agnostic: the same rule the
+    decode scatter applies token-by-token, applied here to a whole prefill
+    bucket at once — which is what keeps prefix-hit suffix ingest
+    bit-identical to cold prefill under int8 KV too.
+    """
+    from repro.core.quant import kv_quantize
+
+    def go(t):
+        if isinstance(t, dict):
+            if "k" in t and "kpos" in t and "k_scale" not in t:
+                kq, ks = kv_quantize(t["k"])
+                vq, vs = kv_quantize(t["v"])
+                return {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs,
+                        "kpos": t["kpos"]}
+            return {k: go(v) for k, v in t.items()}
+        return t
+
+    return go(tree)
+
+
 def paged_cache_map(fn, *trees):
     """Map ``fn(page_axis, leaf_name, *leaves)`` over the scan/tail arena
     leaves of paged cache pytrees.
@@ -330,7 +365,7 @@ class Model:
                 "pos": jnp.zeros((batch,), jnp.int32)}
 
     def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
-                         max_pages: int):
+                         max_pages: int, kv_dtype: str = "bf16"):
         """Paged serving cache: global KV page arenas + per-lane tables.
 
         Tree: {"scan"/"tail": per-layer {"k","v","kpos"} arenas with no
@@ -339,21 +374,29 @@ class Model:
         allocator's reserved trash page)}.  Only all-attention configs
         qualify — recurrent state has no paged analogue, and ring-buffer
         (windowed) caches stay on the dense slot path.
+
+        kv_dtype="int8" stores quantized arenas (int8 k/v + f32
+        `k_scale`/`v_scale` planes): ~half the HBM per cache row, so an
+        equal byte budget holds ~2x the pages (docs/perf.md §int8 pages).
         """
         cfg = self.cfg
         n_rep, tail, kinds = layer_plan(cfg)
         bad = [k for k in kinds if k != "attn"]
         assert not bad, f"paged KV needs an all-attention model, got {bad}"
+        assert kv_dtype in ("bf16", "int8"), kv_dtype
+        quant = kv_dtype == "int8"
 
         def one_period():
             return {f"b{i}": attn_mod.init_paged_attn_cache(
-                cfg, num_pages, page_size) for i in range(len(kinds))}
+                cfg, num_pages, page_size, quantized=quant)
+                for i in range(len(kinds))}
 
         scan_caches = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n_rep,) + x.shape), one_period()
         ) if n_rep else {}
         tail_caches = {str(t): attn_mod.init_paged_attn_cache(
-            cfg, num_pages, page_size) for t in range(tail)}
+            cfg, num_pages, page_size, quantized=quant)
+            for t in range(tail)}
         return {"scan": scan_caches, "tail": tail_caches,
                 "pos": jnp.zeros((batch,), jnp.int32),
                 "pt": jnp.zeros((batch, max_pages), jnp.int32)}
@@ -544,9 +587,13 @@ class Model:
         page-table row becomes `pt_row` and its position counter `pos0`
         (the prompt length; a prefix-cache hit passes hit_len and no
         `small` — the suffix arrives through the decode loop's forced
-        queue instead).
+        queue instead).  A quantized arena (`kv_dtype="int8"`) quantizes
+        the bucket cache on the way in, per cache row, so its leaves match
+        the arena's int8 + scale layout.
         """
         slot = jnp.asarray(slot, jnp.int32)
+        if small is not None and cache_is_quantized(big):
+            small = quantize_kv_tree(small)
 
         def leaf(page_axis, name, b, s):
             ps = b.shape[page_axis + 1]

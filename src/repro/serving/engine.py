@@ -62,6 +62,22 @@ from repro.runtime.stragglers import AdmissionDeadline, StragglerMonitor
 PAD_TOKEN = 0  # fed for finished/free slot rows; their logits are never read
 
 
+def kv_page_bytes(cfg, page_size: int, kv_dtype: str) -> int:
+    """HBM bytes one KV arena page costs across the whole layer stack —
+    the unit for equal-HBM pool sizing (docs/perf.md §int8 pages).
+
+    bf16: 2 (k+v) * KVH * hd elements at 2 B per cache row; int8: the same
+    elements at 1 B plus 2 * KVH f32 scales per row, i.e. (hd+4)/(2*hd) of
+    the bf16 bytes — a fixed budget holds ~2x the pages at hd=64.
+    """
+    per_row = 2 * cfg.n_kv_heads * cfg.head_dim  # k+v elements
+    if kv_dtype == "int8":
+        row_bytes = per_row + 2 * cfg.n_kv_heads * 4  # values + f32 scales
+    else:
+        row_bytes = per_row * 2
+    return cfg.n_layers * page_size * row_bytes
+
+
 @dataclass(eq=False)  # identity equality: rid is caller-chosen, prompt is a
 class Request:        # numpy array (== would be ambiguous), requests mutate
     rid: int
@@ -95,8 +111,21 @@ class EngineBase:
                  deadline_s: float = 0.05, plan=None,
                  max_decode_len: int = 64,
                  decode_horizon: int = 8,
-                 monitor: Optional[StragglerMonitor] = None):
+                 monitor: Optional[StragglerMonitor] = None,
+                 quant_weights: bool = False):
         self.model = model
+        # int8 weight path (models/quantized.py): the decode-step
+        # projections/MLP run W8A8 through dense()'s quantized dispatch —
+        # with kv_dtype="int8" on top the whole decode loop is
+        # integer-dominant, the paper's I-BERT datapath at serving scale
+        self.quant_weights = bool(quant_weights)
+        if self.quant_weights:
+            if plan is not None:
+                raise ValueError(
+                    "quant_weights does not compose with a ClusterPlan yet:"
+                    " plan.param_specs are derived from the bf16 leaf tree")
+            from repro.models.quantized import quantize_params_for_serving
+            params = quantize_params_for_serving(params)
         self.max_batch = max_batch
         self.buckets = tuple(sorted(buckets))
         self.greedy = greedy
@@ -326,11 +355,23 @@ class ContinuousBatchingEngine(EngineBase):
     evict cached prefixes LRU under pressure, preempt-to-free as the last
     resort) and `stats` gains prefix_hits / prefix_hit_tokens /
     pages_in_use / pages_peak / preemptions / active_lane_steps.
+
+    ``kv_dtype="int8"`` stores the arena quantized (int8 k/v + per-row
+    f32 scale planes, core/quant.kv_quantize): ~half the HBM per resident
+    token, so an equal byte budget holds ~2x the pages — size pools
+    across dtypes with the module-level `kv_page_bytes`.  Decode
+    runs the `paged_flash_decode_q` kernel (in-VMEM dequant); prefix
+    pages share scales by construction (they live in the arena), so hit
+    admissions stay bit-identical to cold prefills.  Greedy streams match
+    bf16 to >=99% on confident models (docs/serving.md §kv_dtype for the
+    caveats); combine with ``quant_weights=True`` for an
+    integer-dominant decode loop.
     """
 
     def __init__(self, *args, paged="auto", page_size: int = 16,
                  num_pages: Optional[int] = None,
-                 max_hit_suffix: Optional[int] = None, **kw):
+                 max_hit_suffix: Optional[int] = None,
+                 kv_dtype: str = "bf16", **kw):
         super().__init__(*args, **kw)
         # active_lane_steps / decode_steps = sustained concurrency (mean
         # occupied lanes per decode step) — the capacity metric the paged
@@ -353,6 +394,13 @@ class ContinuousBatchingEngine(EngineBase):
                 "without a ClusterPlan (recurrent state and ring buffers "
                 "have no paged analogue; plan sharding covers slot tables)")
         self.paged = bool(paged)
+        assert kv_dtype in ("bf16", "int8"), kv_dtype
+        if kv_dtype == "int8" and not self.paged:
+            raise ValueError(
+                "kv_dtype='int8' needs the paged KV pool (quantized dense "
+                "slot rows are not implemented); this model/config fell "
+                "back to dense slots")
+        self.kv_dtype = kv_dtype
         if self.paged:
             self.page_size = page_size
             # round the per-lane logical capacity up to whole pages: the
@@ -388,11 +436,16 @@ class ContinuousBatchingEngine(EngineBase):
 
     # -- internals ------------------------------------------------------------
 
+    def kv_page_bytes(self) -> int:
+        """HBM bytes one arena page costs at this engine's kv_dtype (the
+        module-level `kv_page_bytes` bound to this engine's config)."""
+        return kv_page_bytes(self.model.cfg, self.page_size, self.kv_dtype)
+
     def _init_slot_caches(self):
         if self.paged:
             return self.model.init_paged_cache(
                 self.max_batch, self.pool.num_pages, self.page_size,
-                self.max_pages)
+                self.max_pages, kv_dtype=self.kv_dtype)
         caches = self.model.init_cache(self.max_batch, self.cache_len)
         if self.plan is not None:
             specs = self.plan.specs_for_caches(

@@ -1,0 +1,344 @@
+"""Int8 KV-cache pages: quantization bounds, kernel/oracle equality, and
+engine-level accuracy.
+
+Kernel bar: for random page tables — including pages *shared between lanes*
+(radix prefix reuse), whose scales are shared by construction because they
+live in the arena — the quantized Pallas kernel (interpret mode, real body),
+the quantized jnp oracle, and the dense decode oracle over the explicitly
+gathered-and-dequantized cache all agree; the last pair *bitwise*.
+
+Quantization bar: `kv_quantize` round-trips within half a quantization step
+per element (round-half-away symmetric int8), per cache row per kv head.
+
+Engine bar: a `kv_dtype="int8"` engine serves greedy streams that agree
+with the bf16 engine on >= 99% of tokens — measured on a model fitted to a
+confident synthetic task (models/synthetic.py), because stream agreement on
+a random-init model measures bf16 tie-breaking, not quantization — and an
+int8 prefix-cache hit (shared quantized pages + shared scales) is
+bit-identical to the int8 cold-prefill stream.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # deterministic fallback draws (see detshim.py)
+    from detshim import given, settings
+    import detshim as st
+
+from repro.core.quant import kv_dequantize, kv_quantize
+from repro.kernels import ops
+
+SENTINEL = 2 ** 30
+
+
+# ---------------------------------------------------------------------------
+# quantize -> dequantize round trip
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_kv_quantize_round_trip_error_bound(seed):
+    """|x - dequant(quantize(x))| <= scale/2 elementwise (round half away),
+    with one scale per row per kv head and full int8 range use."""
+    rng = np.random.default_rng(seed)
+    shape = (3, 5, 2, 16)  # (pages, ps, KVH, hd)-shaped rows
+    x = jnp.asarray(rng.normal(0, rng.uniform(0.1, 4.0), shape), jnp.float32)
+    q, s = kv_quantize(x)
+    assert q.dtype == jnp.int8 and s.shape == shape[:-1]
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)))) <= 127
+    err = np.abs(np.asarray(kv_dequantize(q, s)) - np.asarray(x))
+    bound = np.asarray(s)[..., None] * 0.5 + 1e-7
+    assert (err <= bound).all(), float((err - bound).max())
+    # scales are per row: every row's amax maps to |q| == 127 exactly
+    amax_rows = np.abs(np.asarray(q)).max(-1)
+    np.testing.assert_array_equal(amax_rows, 127)
+
+
+def test_kv_quantize_bf16_input_and_zero_rows():
+    """bf16 rows quantize through f32; all-zero rows give the eps scale
+    (never a div-by-zero) and dequantize to exact zeros."""
+    x = jnp.zeros((2, 4, 8), jnp.bfloat16)
+    q, s = kv_quantize(x)
+    assert (np.asarray(q) == 0).all() and (np.asarray(s) > 0).all()
+    np.testing.assert_array_equal(np.asarray(kv_dequantize(q, s)), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# quantized paged flash-decode vs oracles
+# ---------------------------------------------------------------------------
+
+
+def _mk_paged_q(rng, b, h, kvh, hd, n_pages, ps, maxp, share=True):
+    """Random *quantized* arena + per-lane tables; lanes may share table
+    entries, and a shared page's scales are shared automatically (they are
+    arena planes indexed through the same table)."""
+    q = jnp.asarray(rng.normal(0, 1, (b, h, hd)), jnp.float32) * (hd ** -0.5)
+    kf = jnp.asarray(rng.normal(0, 1, (n_pages, ps, kvh, hd)), jnp.float32)
+    vf = jnp.asarray(rng.normal(0, 1, (n_pages, ps, kvh, hd)), jnp.float32)
+    k8, ks = kv_quantize(kf)
+    v8, vs = kv_quantize(vf)
+    kpos = np.full((n_pages, ps), SENTINEL, np.int64)
+    pt = np.zeros((b, maxp), np.int32)
+    next_page = 1  # page 0 = trash (all sentinel)
+    shared = {}
+    for lane in range(b):
+        for j in range(maxp):
+            if share and j in shared and rng.random() < 0.5:
+                pt[lane, j] = shared[j]  # prefix page shared across lanes
+            else:
+                page = next_page
+                next_page += 1
+                assert page < n_pages
+                pt[lane, j] = page
+                shared.setdefault(j, page)
+                kpos[page] = j * ps + np.arange(ps)
+    qpos = jnp.asarray(rng.integers(ps, maxp * ps, b), jnp.int32)
+    return (q, k8, v8, ks, vs, jnp.asarray(kpos, jnp.int32),
+            jnp.asarray(pt), qpos)
+
+
+@given(st.integers(0, 10_000), st.sampled_from([(4, 4), (8, 2), (6, 3)]),
+       st.sampled_from([(8, 3), (16, 2), (8, 5)]))
+@settings(max_examples=12, deadline=None)
+def test_paged_decode_q_interpret_matches_ref(seed, heads, paging):
+    """Quantized Pallas kernel (interpret) == dequantizing gather oracle,
+    cross-lane shared pages (shared scales) included."""
+    h, kvh = heads
+    ps, maxp = paging
+    rng = np.random.default_rng(seed)
+    b, hd = 3, 16
+    n_pages = 1 + b * maxp + 1
+    q, k8, v8, ks, vs, kpos, pt, qpos = _mk_paged_q(
+        rng, b, h, kvh, hd, n_pages, ps, maxp)
+    got = ops.paged_flash_decode_q(q, k8, v8, ks, vs, kpos, pt, qpos,
+                                   impl="interpret")
+    want = ops.paged_flash_decode_q(q, k8, v8, ks, vs, kpos, pt, qpos,
+                                    impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_paged_q_ref_bitwise_equals_dense_ref_on_dequant(seed):
+    """Gathering the int8 pages, dequantizing with their arena scales and
+    running the dense decode oracle is *bitwise* what the quantized paged
+    oracle computes — the property int8 engine-stream comparisons stand
+    on."""
+    rng = np.random.default_rng(seed)
+    b, h, kvh, hd, ps, maxp = 2, 4, 2, 16, 8, 4
+    n_pages = 1 + b * maxp
+    q, k8, v8, ks, vs, kpos, pt, qpos = _mk_paged_q(
+        rng, b, h, kvh, hd, n_pages, ps, maxp)
+    paged = ops.paged_flash_decode_q(q, k8, v8, ks, vs, kpos, pt, qpos,
+                                     impl="ref")
+    ptn = np.asarray(pt)
+    kg = jnp.asarray(np.asarray(kv_dequantize(k8, ks))[ptn].reshape(
+        b, -1, kvh, hd))
+    vg = jnp.asarray(np.asarray(kv_dequantize(v8, vs))[ptn].reshape(
+        b, -1, kvh, hd))
+    kpg = jnp.asarray(np.asarray(kpos)[ptn].reshape(b, -1))
+    dense = ops.flash_decode(q, kg, vg, kpg, qpos, impl="ref")
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+
+
+def test_paged_decode_q_inactive_and_sentinel_rows():
+    """Inactive lanes and all-sentinel (never written / trash) pages give
+    exact zeros, never NaN, in both impls — zero scales on never-written
+    pages must not poison anything."""
+    rng = np.random.default_rng(7)
+    b, h, kvh, hd, ps, maxp = 3, 4, 2, 16, 8, 3
+    q, k8, v8, ks, vs, kpos, pt, qpos = _mk_paged_q(
+        rng, b, h, kvh, hd, 1 + b * maxp, ps, maxp)
+    pt = pt.at[2].set(0)  # lane 2's whole table points at the trash page
+    active = jnp.asarray([True, False, True])
+    for impl in ("ref", "interpret"):
+        out = np.asarray(ops.paged_flash_decode_q(
+            q, k8, v8, ks, vs, kpos, pt, qpos, active=active, impl=impl))
+        assert not np.isnan(out).any(), impl
+        np.testing.assert_array_equal(out[1], 0.0)  # inactive
+        np.testing.assert_array_equal(out[2], 0.0)  # all-sentinel pages
+
+
+def test_paged_decode_q_trash_page_garbage_is_unreachable():
+    """Garbage int8 values and scales in the trash page (inactive lanes
+    scatter there) must not perturb live lanes while its kpos stay
+    sentinel."""
+    rng = np.random.default_rng(11)
+    b, h, kvh, hd, ps, maxp = 2, 4, 2, 16, 8, 3
+    q, k8, v8, ks, vs, kpos, pt, qpos = _mk_paged_q(
+        rng, b, h, kvh, hd, 1 + b * maxp, ps, maxp)
+    clean = ops.paged_flash_decode_q(q, k8, v8, ks, vs, kpos, pt, qpos,
+                                     impl="ref")
+    dirty = ops.paged_flash_decode_q(
+        q, k8.at[0].set(127), v8.at[0].set(-127),
+        ks.at[0].set(1e9), vs.at[0].set(1e9), kpos, pt, qpos, impl="ref")
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(dirty))
+
+
+# ---------------------------------------------------------------------------
+# quantized cache trees (admission path)
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_kv_tree_matches_rowwise_quantization():
+    """The admission-path bulk conversion applies exactly the per-row rule
+    the decode scatter applies token-by-token — the invariant that keeps
+    prefix-hit suffix ingest bit-identical to cold prefill under int8."""
+    from repro.models.transformer import cache_is_quantized, quantize_kv_tree
+
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(0, 1, (1, 6, 2, 8)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (1, 6, 2, 8)), jnp.bfloat16)
+    kpos = jnp.arange(6, dtype=jnp.int32)[None]
+    tree = {"scan": {"b0": {"k": k, "v": v, "kpos": kpos}}, "tail": {}}
+    out = quantize_kv_tree(tree)
+    leaf = out["scan"]["b0"]
+    assert set(leaf) == {"k", "v", "k_scale", "v_scale", "kpos"}
+    kq, ks = kv_quantize(k)
+    np.testing.assert_array_equal(np.asarray(leaf["k"]), np.asarray(kq))
+    np.testing.assert_array_equal(np.asarray(leaf["k_scale"]),
+                                  np.asarray(ks))
+    np.testing.assert_array_equal(np.asarray(leaf["kpos"]),
+                                  np.asarray(kpos))
+    assert cache_is_quantized(out) and not cache_is_quantized(tree)
+
+
+# ---------------------------------------------------------------------------
+# engine: int8 KV serving
+# ---------------------------------------------------------------------------
+
+
+def _fitted_setup():
+    from repro.configs import get_config
+    from repro.models.synthetic import fit_affine_lm
+    from repro.models.transformer import make_model
+
+    cfg = get_config("smollm-135m").reduced()
+    model = make_model(cfg, remat=False)
+    params = fit_affine_lm(model)  # cached across tests in this process
+    return cfg, model, params
+
+
+@pytest.fixture
+def ref_impl():
+    from repro.kernels import ops as kops
+    with kops.pinned_impl("ref"):
+        yield
+
+
+def _run_engine(model, params, prompts, budgets, kv_dtype, **kw):
+    from repro.serving.engine import ContinuousBatchingEngine, Request
+
+    eng = ContinuousBatchingEngine(model, params, max_batch=4,
+                                   buckets=(16, 32), kv_dtype=kv_dtype, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=budgets[i]))
+    done = eng.run()
+    return {r.rid: r.tokens_out for r in done}, eng
+
+
+def test_int8_engine_matches_bf16_streams_99pct(ref_impl):
+    """Acceptance: kv_dtype='int8' and bf16 greedy streams agree on >=99%
+    of tokens for an in-distribution workload on the fitted model."""
+    from repro.models.synthetic import affine_prompts
+
+    cfg, model, params = _fitted_setup()
+    rng = np.random.default_rng(5)
+    prompts = affine_prompts(rng, 10, cfg.vocab_size)
+    budgets = [int(b) for b in rng.integers(8, 24, len(prompts))]
+    bf, _ = _run_engine(model, params, prompts, budgets, "bf16")
+    i8, eng = _run_engine(model, params, prompts, budgets, "int8")
+    assert eng.kv_dtype == "int8" and eng.paged
+    tot = sum(len(v) for v in bf.values())
+    matched = sum(sum(a == b for a, b in zip(bf[r], i8[r])) for r in bf)
+    assert all(len(i8[r]) == budgets[r] for r in i8)
+    assert matched / tot >= 0.99, (matched, tot)
+
+
+def test_int8_prefix_hit_bit_identical_to_cold(ref_impl):
+    """A prefix-cache hit on *quantized* pages (shared int8 values AND
+    shared arena scales) must produce the identical stream a cold int8
+    prefill produces — the int8 analogue of the PR 3 bit-identity bar."""
+    from repro.serving.engine import ContinuousBatchingEngine, Request
+
+    cfg, model, params = _fitted_setup()
+    rng = np.random.default_rng(9)
+    t0, step = int(rng.integers(0, cfg.vocab_size)), 5
+    prefix = ((t0 + step * np.arange(16)) % cfg.vocab_size).astype(np.int32)
+    tails = [((prefix[-1] + step * np.arange(1, 4 + i)) % cfg.vocab_size)
+             .astype(np.int32) for i in range(3)]
+    prompts = [np.concatenate([prefix, t]) for t in tails]
+
+    def serve(batch):
+        eng = ContinuousBatchingEngine(model, params, max_batch=batch,
+                                       buckets=(32,), kv_dtype="int8",
+                                       page_size=8)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        return {r.rid: r.tokens_out for r in eng.run()}, eng
+
+    # batch=1: sequential admissions -> later prompts hit the first's pages
+    hit, eng_hit = serve(1)
+    assert eng_hit.stats["prefix_hits"] >= 1
+    # fresh engine per prompt: every admission is a cold prefill
+    cold = {}
+    for i, p in enumerate(prompts):
+        eng = ContinuousBatchingEngine(model, params, max_batch=1,
+                                       buckets=(32,), kv_dtype="int8",
+                                       page_size=8)
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        cold.update({r.rid: r.tokens_out for r in eng.run()})
+    assert hit == cold
+
+
+def test_int8_requires_paged_pool():
+    """kv_dtype='int8' on a dense-slot fallback (e.g. recurrent model)
+    must fail loudly, not silently serve bf16 slots."""
+    from repro.configs import get_config
+    from repro.models.transformer import init_params, make_model
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = get_config("recurrentgemma-2b").reduced()
+    model = make_model(cfg, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="int8"):
+        ContinuousBatchingEngine(model, params, max_batch=2,
+                                 buckets=(16,), kv_dtype="int8")
+
+
+def test_kv_page_bytes_int8_buys_more_pages():
+    from repro.configs import get_config
+    from repro.serving.engine import kv_page_bytes
+
+    cfg = get_config("smollm-135m").reduced()
+    b16 = kv_page_bytes(cfg, 16, "bf16")
+    i8 = kv_page_bytes(cfg, 16, "int8")
+    assert i8 < b16
+    hd = cfg.head_dim
+    assert i8 / b16 == pytest.approx((hd + 4) / (2 * hd))
+
+
+def test_quant_weights_engine_serves_and_matches(ref_impl):
+    """W8A8 weight path: the engine serves to budget and the streams stay
+    >=99% aligned with the bf16-weight engine on the fitted model; with
+    kv_dtype='int8' on top, the decode loop is integer-dominant."""
+    from repro.models.synthetic import affine_prompts
+
+    cfg, model, params = _fitted_setup()
+    rng = np.random.default_rng(13)
+    prompts = affine_prompts(rng, 6, cfg.vocab_size)
+    budgets = [int(b) for b in rng.integers(6, 14, len(prompts))]
+    bf, _ = _run_engine(model, params, prompts, budgets, "bf16")
+    qq, eng = _run_engine(model, params, prompts, budgets, "int8",
+                          quant_weights=True)
+    assert eng.quant_weights
+    assert all(len(qq[r]) == budgets[r] for r in qq)
+    tot = sum(len(v) for v in bf.values())
+    matched = sum(sum(a == b for a, b in zip(bf[r], qq[r])) for r in bf)
+    assert matched / tot >= 0.99, (matched, tot)

@@ -485,6 +485,90 @@ def serve_quant(state: Dict) -> None:
     }
 
 
+def serve_sharded(state: Dict) -> None:
+    """The tentpole's measurement: a `mode="serve"` plan on the forced
+    multi-device host mesh (CI: XLA_FLAGS=--xla_force_host_platform_
+    device_count=8) sharding the paged arena's kv-head dim over `model`,
+    vs the single-device paged engine on the same shared-prefix stream.
+
+    On fake host-platform devices the sharded path is *slower* (8 CPU
+    "devices" share one socket and every gather is a real copy), so the
+    gated ratio `sharded_vs_single_tok_s` is an overhead floor, not a
+    speedup claim — the quantity that transfers is `token_match_rate`,
+    gated at the absolute floor: sharded serving must be BIT-IDENTICAL
+    to single-device (the serve plan's gather-form TP + shard_map'd
+    paged decode make every cross-device reduction exact).
+    """
+    import dataclasses
+
+    import jax as _jax
+    from repro.configs import get_config
+    from repro.core.cluster_builder import build_plan
+    from repro.kernels import ops as kops
+    from repro.launch.mesh import make_mesh
+    from repro.models.transformer import init_params, make_model
+    from repro.serving.engine import ContinuousBatchingEngine
+    from repro.serving.stream import shared_prefix_requests
+
+    n_dev = _jax.device_count()
+    if n_dev < 2:
+        row("serve_sharded_skipped", 0.0,
+            "needs a multi-device host platform (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8 before jax init); "
+            "gated keys omitted from this run")
+        # drop the bench from the gate scope too: a single-device sweep
+        # with --check-against must not fail on the baseline's
+        # serve_sharded section it declared itself unable to measure
+        state.setdefault("skipped", set()).add("serve_sharded")
+        return
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              n_heads=8, n_kv_heads=8)
+    model = make_model(cfg, remat=False)
+    params = init_params(cfg, _jax.random.PRNGKey(0))
+    stream = shared_prefix_requests(np.random.default_rng(0), 16,
+                                    cfg.vocab_size, prefix_len=48,
+                                    suffix_range=(3, 9), budgets=(8, 24),
+                                    rate=300.0)
+    mesh = make_mesh((1, n_dev), ("data", "model"))
+    setups = (("single", None),
+              ("sharded", build_plan(cfg, mesh, mode="serve")))
+    metrics, streams = {}, {}
+    with kops.pinned_impl("ref"):
+        for name, plan in setups:
+            eng = ContinuousBatchingEngine(
+                model, params, max_batch=4, buckets=(64,),
+                max_decode_len=32, plan=plan)
+            (done, wall, tok_s, ttft), streams[name], metrics[name] = \
+                _measure_cb_engine(eng, stream)
+            toks = sum(len(r.tokens_out) for r in done)
+            metrics[name].update(prefix_hits=eng.stats["prefix_hits"])
+            row(f"serve_sharded_{name}_per_token", wall / toks * 1e6,
+                f"{tok_s:.1f}tok/s devices={n_dev if plan else 1} "
+                f"ttft_p50={np.percentile(ttft, 50):.1f}ms "
+                f"hits={eng.stats['prefix_hits']}")
+    tot = matched = 0
+    for k in range(len(streams["single"])):  # every measured pass
+        for rid, ts in streams["single"][k].items():
+            tot += len(ts)
+            matched += sum(a == b
+                           for a, b in zip(ts, streams["sharded"][k][rid]))
+    match_rate = matched / max(tot, 1)
+    ratio = metrics["sharded"]["tok_s"] / metrics["single"]["tok_s"]
+    row("serve_sharded_vs_single_tok_s", ratio,
+        f"{n_dev}-way host-platform mesh overhead floor (fake devices "
+        "share one socket; the ratio is gated so the sharded path can't "
+        "silently rot)")
+    row("serve_sharded_token_match_rate", match_rate,
+        f"{matched}/{tot} tokens identical to single-device "
+        "(bit-identity gated at the 0.99 absolute floor; expected 1.0)")
+    state.setdefault("bench_json", {})["serve_sharded"] = {
+        "engines": metrics,
+        "devices": n_dev,
+        "sharded_vs_single_tok_s": round(ratio, 3),
+        "token_match_rate": round(match_rate, 4),
+    }
+
+
 BENCHES = {
     "table1": table1_encoder_latency,
     "table2": table2_full_model_eq1,
@@ -498,12 +582,13 @@ BENCHES = {
     "serve_cb": serve_cb,
     "serve_paged": serve_paged,
     "serve_quant": serve_quant,
+    "serve_sharded": serve_sharded,
 }
 
 # benches whose state is produced by earlier benches in the full sweep
 _ORDER = ["table1", "table2", "table3", "table4", "sec9", "table5",
           "fig15", "gmi", "kernels", "serve_cb", "serve_paged",
-          "serve_quant"]
+          "serve_quant", "serve_sharded"]
 _NEEDS = {"table2": ["table1"], "table3": ["table1"],
           "table4": ["table1", "table3"], "table5": ["sec9"]}
 
@@ -519,7 +604,8 @@ TOK_S_REGRESSION = 0.25
 DISP_TOK_INCREASE = 0.10
 RATIO_KEYS = ("paged_vs_dense_tok_s", "paged_vs_dense_concurrency",
               "fused_vs_single_step_tok_s", "dispatches_per_token_drop",
-              "int8_vs_bf16_tok_s", "int8_vs_bf16_concurrency")
+              "int8_vs_bf16_tok_s", "int8_vs_bf16_concurrency",
+              "sharded_vs_single_tok_s")
 # absolute floor: int8 greedy streams must match bf16 on >=99% of tokens —
 # accuracy is not machine-relative, so no baseline-relative band applies
 TOKEN_MATCH_FLOOR = 0.99
@@ -577,7 +663,8 @@ def _gated_paths(tree, path=""):
     return out
 
 
-def check_against(baseline_path: str, bench_json: Dict) -> int:
+def check_against(baseline_path: str, bench_json: Dict,
+                  ran=None) -> int:
     """Exit-code-style perf gate: 0 = within thresholds, 1 = regression.
 
     Fails with an explicit message — never a KeyError — when the baseline
@@ -586,12 +673,21 @@ def check_against(baseline_path: str, bench_json: Dict) -> int:
     gated metric the run produced but the baseline has never seen (e.g.
     the first run after adding a benchmark axis) means the committed
     baseline must be refreshed before the gate can vouch for it.
+
+    `ran` (bench names this invocation executed) scopes the comparison to
+    the baseline's matching top-level sections: the PR perf-smoke job runs
+    the serving benches and the multi-device job runs `serve_sharded`
+    against the SAME committed baseline — each gate vouches only for the
+    sections its own run produced, while "the bench ran but a gated
+    metric vanished" still fails inside a section.
     """
     import json
     with open(baseline_path) as f:
         base = json.load(f)
     base.pop("rows", None)
     base.pop("_meta", None)
+    if ran is not None:
+        base = {k: v for k, v in base.items() if k in ran}
     missing = sorted(set(_gated_paths(bench_json)) - set(_gated_paths(base)))
     if missing:
         print(f"PERF GATE UNUSABLE: {baseline_path} has no entry for "
@@ -629,6 +725,23 @@ def main(argv=None) -> None:
         del args[i:i + 2]
         return p
 
+    if "--list" in args:  # enumerate benches + their gated baseline keys
+        import os
+        base = {}
+        bp = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "baseline.json")
+        if os.path.exists(bp):
+            with open(bp) as f:
+                base = json.load(f)
+            base.pop("_meta", None)
+            base.pop("rows", None)
+        print(f"{'bench':<14} gated baseline keys ({bp})")
+        for name in _ORDER:
+            keys = _gated_paths(base.get(name, {}), f"{name}.")
+            print(f"{name:<14} " + (", ".join(keys) if keys
+                                    else "(not gated)"))
+        return
+
     json_path = _path_flag("--json")  # machine-readable perf trajectory
     check_path = _path_flag("--check-against")  # perf-regression gate
     write_baseline = _path_flag("--write-baseline")
@@ -665,23 +778,37 @@ def main(argv=None) -> None:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {json_path}")
     if write_baseline is not None:
-        payload = dict(bench_json, _meta={
+        import os
+        # MERGE into an existing baseline: only the sections this run
+        # produced are replaced, so the single-device serving refresh and
+        # the 8-device serve_sharded refresh compose into one file
+        payload: Dict = {}
+        if os.path.exists(write_baseline):
+            with open(write_baseline) as f:
+                payload = json.load(f)
+        payload.update(bench_json)
+        payload["_meta"] = {
             "note": "perf-gate baseline; regenerate ON A QUIET BOX OF THE "
                     "CI RUNNER CLASS with `python benchmarks/run.py "
                     "serve_cb --shared-prefix --kv-dtype int8 "
-                    "--write-baseline benchmarks/baseline.json` — or one "
-                    "click via the baseline-refresh workflow_dispatch job "
-                    "(absolute tok_s is machine-relative; the speedup "
-                    "ratios and token_match_rate transfer)",
+                    "--write-baseline benchmarks/baseline.json` plus "
+                    "`XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+                    "python benchmarks/run.py serve_sharded "
+                    "--write-baseline benchmarks/baseline.json` (writes "
+                    "MERGE per-section) — or one click via the "
+                    "baseline-refresh workflow_dispatch job (absolute "
+                    "tok_s is machine-relative; the speedup ratios and "
+                    "token_match_rate transfer)",
             "gate": {"tok_s_regression": TOK_S_REGRESSION,
                      "dispatches_per_token_increase": DISP_TOK_INCREASE,
                      "token_match_floor": TOKEN_MATCH_FLOOR,
-                     "ratio_keys": list(RATIO_KEYS)}})
+                     "ratio_keys": list(RATIO_KEYS)}}
         with open(write_baseline, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote baseline {write_baseline}")
     if check_path is not None:
-        sys.exit(check_against(check_path, bench_json))
+        sys.exit(check_against(check_path, bench_json,
+                               ran=ran - state.get("skipped", set())))
 
 
 if __name__ == "__main__":

@@ -111,6 +111,7 @@ def build_topology(cfg: ModelConfig) -> ClusterTopology:
 class MeshAxes:
     dp: Tuple[str, ...]  # data-parallel axes, e.g. ("pod","data")
     tp: str = "model"
+    stage: Optional[str] = None  # pipeline axis (mode="serve_pipeline")
 
     @property
     def all(self) -> Tuple[str, ...]:
@@ -137,16 +138,41 @@ class ClusterPlan:
     #    after the plan exists, so specs must be derivable post-hoc) --------
 
     def specs_for_params(self, params_shape: Any) -> Any:
+        if self.mode == "serve_pipeline":
+            n = _axsize(self.mesh, self.axes.stage)
+            return _tree_specs(
+                params_shape,
+                lambda p, s: _stage_spec(p, s, self.axes.stage, n))
         r = Rules(self.mesh, self.axes, fsdp=self.fsdp)
         return _tree_specs(
-            params_shape, lambda p, s: _param_spec(p, s, r, self.cfg.family))
+            params_shape, lambda p, s: _param_spec(p, s, r, self.cfg.family,
+                                                   mode=self.mode))
 
     def specs_for_caches(self, caches_shape: Any, batch: int = 0,
-                         slot_table: bool = False) -> Any:
+                         slot_table: bool = False,
+                         paged: bool = False) -> Any:
         """slot_table=True: the continuous-batching engine's persistent
         cache, admitted into at traced slot indices — the slot (batch) dim
-        must stay unsharded or every insert crosses data shards."""
+        must stay unsharded or every insert crosses data shards.
+
+        paged=True: the cache tree is a *paged arena*
+        (`Model.init_paged_cache`) — per-layer `k`/`v` arenas
+        (P, ps, KVH, hd) and `k_scale`/`v_scale` planes (P, ps, KVH) shard
+        the kv-head dim over `model` (decode reads and the per-step scatter
+        writes stay shard-local: the scatter addresses pages/offsets, never
+        the head dim), while `kpos`, the per-lane page tables `pt` and the
+        position counters `pos` replicate — the page table is the *shared*
+        routing metadata every model shard walks identically, the TPU
+        analogue of the paper's gateway routing tables."""
+        if self.mode == "serve_pipeline":
+            n = _axsize(self.mesh, self.axes.stage)
+            return _tree_specs(
+                caches_shape,
+                lambda p, s: _stage_spec(p, s, self.axes.stage, n))
         r = Rules(self.mesh, self.axes, fsdp=self.fsdp)
+        if paged:
+            return _tree_specs(
+                caches_shape, lambda p, s: _paged_cache_spec(p, s, r))
         return _tree_specs(
             caches_shape,
             lambda p, s: _cache_spec(p, s, r, batch, mode=self.mode,
@@ -193,8 +219,19 @@ class Rules:
 
 
 def _param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
-                r: Rules, family: str = "dense") -> P:
-    """Rule table keyed on parameter names (see models/)."""
+                r: Rules, family: str = "dense", mode: str = "train") -> P:
+    """Rule table keyed on parameter names (see models/).
+
+    mode="serve": the *reduction* projections (attention `wo`, MLP/MoE
+    down-projections) replicate instead of sharding their contraction dim.
+    This is the paper's Fig. 14 mapping verbatim: per-head kernels compute
+    in parallel, a GMI `gather` collects the head outputs, and `linear_o`
+    runs on the gathered activation — so the only cross-device reductions
+    left are exact (gathers, not partial-sum psums) and a plan-sharded
+    engine's token streams stay BIT-IDENTICAL to single-device serving
+    (tests/test_sharded_serving.py).  Serving decode activations are tiny
+    (one row per lane), so the gather costs what the psum would have.
+    """
     name = path[-1]
     # int8-serving leaves: "q" shards like its parent weight, "s" replicates
     if name == "s" and len(path) > 1 and path[-2] in (
@@ -211,6 +248,17 @@ def _param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
     def mk(tp, fsdp):
         return r.spec(s, tp, fsdp, offset=off)
 
+    # serve mode, TP-only plans (fsdp off): reduction projections
+    # replicate (gather-form TP — the Fig. 14 gather-then-linear_o
+    # mapping; exactness note in docstring).  When the plan KEPT fsdp for
+    # capacity (the 400B 50GB/chip case), replicating the largest weight
+    # class would OOM exactly where fsdp was retained to prevent it, so
+    # those plans fall through to the normal TP+FSDP rules — correctness
+    # is unchanged, only the cross-device-count bit-identity contract is
+    # scoped to TP-only serve plans (docs/serving.md).
+    if mode == "serve" and not r.dp_opts and name in (
+            "wo", "shared_wo", "glu_wo", "down", "w_out"):
+        return P(*([None] * len(shape)))
     # embeddings / head
     if name in ("tok", "head"):
         if name == "tok" and s[0] % r.tp_n == 0:
@@ -314,6 +362,44 @@ def _cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...], r: Rules,
     return P(*parts)
 
 
+def _paged_cache_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+                      r: Rules) -> P:
+    """Leaf rules for a paged KV arena (serve mode).
+
+    Arena leaves have a *page* axis where dense slot caches have batch:
+    `k`/`v` (P, ps, KVH, hd) and the int8 path's `k_scale`/`v_scale`
+    (P, ps, KVH) put the kv-head dim on `model` when divisible — the reads
+    (paged_flash_decode under shard_map) and the decode scatter (addressed
+    by page/offset) then never cross shards.  `kpos` (P, ps), the per-lane
+    page tables `pt` (B, MAXP) and position counters `pos` (B,) replicate:
+    they are the routing metadata every shard must walk identically.
+    """
+    name = path[-1]
+    in_scan = "scan" in path
+    off = 1 if in_scan else 0
+    s = shape[off:]
+    parts: List[Any] = [None] * len(shape)
+    if name in ("k", "v") and len(s) == 4 and s[2] % r.tp_n == 0:
+        parts[off + 2] = r.axes.tp
+    elif name in ("k_scale", "v_scale") and len(s) == 3 \
+            and s[2] % r.tp_n == 0:
+        parts[off + 2] = r.axes.tp
+    return P(*parts)
+
+
+def _stage_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+                stage: str, stage_n: int) -> P:
+    """mode="serve_pipeline": scan-stacked leaves (leading dim = repeated
+    periods) shard that dim over the `stage` axis — stage s holds its
+    contiguous slice of the layer stack, the paper's one-encoder-per-
+    cluster placement — and everything else (embeddings, norms, tail
+    blocks, per-lane decode state) replicates so the token feedback loop
+    runs identically on every stage."""
+    if "scan" in path and len(shape) >= 1 and shape[0] % stage_n == 0:
+        return P(*((stage,) + (None,) * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
 def _tree_specs(tree, fn) -> Any:
     """Map fn(path, aval) over a pytree of ShapeDtypeStructs/arrays."""
 
@@ -336,8 +422,32 @@ def build_plan(cfg: ModelConfig, mesh: Mesh,
     are no gradients, and FSDP'd contraction dims turn every projection
     into a cross-data all-reduce (§Perf iteration A1: -46%% collective
     bytes on recurrentgemma prefill).  FSDP is kept when TP-only weights
-    would not fit HBM (the 400B arch: 50GB/chip TP-only).
+    would not fit HBM (the 400B arch: 50GB/chip TP-only).  Reduction
+    projections replicate (gather-form TP, `_param_spec`), so a serve
+    plan's outputs are bit-identical to single-device serving.
+
+    mode="serve_pipeline": the mesh must carry a `stage` axis; the
+    scan-stacked layer dim shards over it (stage s = its slice of the
+    layer stack, the paper's encoder-per-cluster placement) and everything
+    else replicates — the serving executor streams decode micro-steps
+    through the stages with collective_permute (serving/executor.py).
     """
+    if mode == "serve_pipeline":
+        if "stage" not in mesh.shape:
+            raise ValueError(
+                "mode='serve_pipeline' needs a mesh with a 'stage' axis "
+                "(e.g. make_mesh((n,), ('stage',)))")
+        axes = MeshAxes(dp=(), tp="model" if "model" in mesh.shape
+                        else "stage", stage="stage")
+        plan = ClusterPlan(cfg=cfg, axes=axes, mesh=mesh,
+                           topology=build_topology(cfg), mode=mode,
+                           fsdp=False)
+        if params_shape is not None:
+            plan.param_specs = plan.specs_for_params(params_shape)
+        if caches_shape is not None:
+            plan.cache_specs = plan.specs_for_caches(caches_shape, batch)
+        plan.data_spec = lambda ndim, b: P(*((None,) * ndim))
+        return plan
     axes = MeshAxes(
         dp=tuple(a for a in ("pod", "data") if a in mesh.shape), tp="model"
     )

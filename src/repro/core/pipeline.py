@@ -39,6 +39,16 @@ def pipeline_steps(n_micro: int, n_stages: int) -> int:
     return n_micro + n_stages - 1
 
 
+def gpipe_forward_perm(n_stages: int):
+    """The forward collective_permute pairs of the GPipe schedule — stage s
+    hands its activation to s+1 (the last stage's wrap-around carries
+    garbage that no active stage ever reads).  Shared by `pipelined_apply`
+    (training/prefill microbatches) and the serving executor's pipelined
+    decode program (decode micro-steps), so the schedule can't drift
+    between the two."""
+    return [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+
 def pipelined_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
                     mesh: Mesh, axis: str,
                     stage_params: Any, x_micro: jax.Array) -> jax.Array:
@@ -51,7 +61,7 @@ def pipelined_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
     n_stages = mesh.shape[axis]
     n_micro = x_micro.shape[0]
     steps = pipeline_steps(n_micro, n_stages)
-    fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+    fwd = gpipe_forward_perm(n_stages)
 
     def body(params, xs):
         # inside shard_map: params leaves have leading dim 1 (this stage)

@@ -226,11 +226,42 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     return out[:, :, :g].reshape(b, h, hd)
 
 
+def _shard_map_heads(call, mesh, axis, q, arena_and_rest, arena_specs):
+    """Dispatch a paged-decode call under shard_map with the kv-head axis
+    partitioned over `axis` and the page table / positions replicated.
+
+    `q` is (B, H, hd) with heads laid out kvh-major (ops reshape to
+    (B, KVH, G, hd) below), so a contiguous H split is exactly a KV-head
+    split — each shard holds whole GQA groups and computes its heads'
+    outputs locally; per-head math (online softmax over that head's pages)
+    never crosses the axis, which is what keeps the sharded dispatch
+    bit-identical to the unsharded one.  This is the SPMD form of the
+    paper's scatter-GMI -> per-head kernels -> gather-GMI pipeline stage.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.pipeline import shard_map_compat
+
+    n = mesh.shape[axis]
+    b, h, _ = q.shape
+    kvh = arena_and_rest[0].shape[2]
+    assert h % n == 0 and kvh % n == 0, (
+        f"head axes (H={h}, KVH={kvh}) must divide mesh axis "
+        f"'{axis}' ({n}); the caller should fall back to the unsharded "
+        "dispatch instead")
+    return shard_map_compat(
+        call, mesh,
+        in_specs=(P(None, axis),) + arena_specs,
+        out_specs=P(None, axis),
+    )(q, *arena_and_rest)
+
+
 def paged_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                        kpos: jax.Array, page_table: jax.Array,
                        qpos: jax.Array,
                        active: Optional[jax.Array] = None,
-                       impl: Optional[str] = None) -> jax.Array:
+                       impl: Optional[str] = None,
+                       mesh=None, axis: Optional[str] = None) -> jax.Array:
     """Single-query decode attention over a paged KV arena.
 
     q: (B, H, hd) *pre-scaled* by 1/sqrt(hd); k/v: (P, ps, KVH, hd) global
@@ -245,8 +276,25 @@ def paged_flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     tile granularity already.  Sliding windows aren't supported here — the
     serving engine keeps windowed (ring-buffer) caches on the dense slot
     path.
+
+    mesh/axis: dispatch under shard_map with the arena's kv-head dim (and
+    q's head dim) partitioned over `axis` and kpos/page_table/qpos/active
+    replicated — the plan-sharded serving path (`_shard_map_heads`).
     """
     impl = impl or default_impl()
+    if mesh is not None and axis is not None and mesh.shape[axis] > 1:
+        from jax.sharding import PartitionSpec as P
+        b = q.shape[0]
+        act = (jnp.ones((b,), bool) if active is None
+               else active.astype(bool))
+
+        def call(qb, kb, vb, kpb, ptb, qpb, ab):
+            return paged_flash_decode(qb, kb, vb, kpb, ptb, qpb,
+                                      active=ab, impl=impl)
+
+        return _shard_map_heads(
+            call, mesh, axis, q, (k, v, kpos, page_table, qpos, act),
+            (P(None, None, axis), P(None, None, axis), P(), P(), P(), P()))
     if impl == "ref":
         return _ref.paged_flash_decode(q, k, v, kpos, page_table, qpos,
                                        active=active)
@@ -273,7 +321,8 @@ def paged_flash_decode_q(q: jax.Array, k: jax.Array, v: jax.Array,
                          kpos: jax.Array, page_table: jax.Array,
                          qpos: jax.Array,
                          active: Optional[jax.Array] = None,
-                         impl: Optional[str] = None) -> jax.Array:
+                         impl: Optional[str] = None,
+                         mesh=None, axis: Optional[str] = None) -> jax.Array:
     """Single-query decode attention over a *quantized* (int8) paged arena.
 
     Same contract as `paged_flash_decode` with k/v int8 and
@@ -287,6 +336,23 @@ def paged_flash_decode_q(q: jax.Array, k: jax.Array, v: jax.Array,
     """
     impl = impl or default_impl()
     assert k.dtype == jnp.int8 and v.dtype == jnp.int8, (k.dtype, v.dtype)
+    if mesh is not None and axis is not None and mesh.shape[axis] > 1:
+        from jax.sharding import PartitionSpec as P
+        b = q.shape[0]
+        act = (jnp.ones((b,), bool) if active is None
+               else active.astype(bool))
+
+        def call(qb, kb, vb, ksb, vsb, kpb, ptb, qpb, ab):
+            return paged_flash_decode_q(qb, kb, vb, ksb, vsb, kpb, ptb,
+                                        qpb, active=ab, impl=impl)
+
+        # scale planes (P, ps, KVH) ride the same kv-head partition as the
+        # int8 values they dequantize
+        return _shard_map_heads(
+            call, mesh, axis, q,
+            (k, v, k_scale, v_scale, kpos, page_table, qpos, act),
+            (P(None, None, axis), P(None, None, axis), P(None, None, axis),
+             P(None, None, axis), P(), P(), P(), P()))
     if impl == "ref":
         out = _ref.paged_flash_decode_q(q, k, v, k_scale, v_scale, kpos,
                                         page_table, qpos, active=active)

@@ -4,11 +4,23 @@ a line-rate ingress feeding a spatial pipeline that never waits for a full
 batch, §8.2).
 
 Requests are submitted with exponential inter-arrival gaps and admitted
-into freed KV-cache slots between decode steps; weights and the slot cache
-are placed under the Cluster-Builder serve plan.
+into freed KV-cache slots between decode steps; weights and the serving
+cache are placed under the Cluster-Builder plan:
+
+  --plan serve           kv-head-sharded paged serving over a
+                         (data, model) mesh — bit-identical to
+                         single-device (docs/serving.md §sharded serving)
+  --plan serve_pipeline  layer stack sharded over a `stage` mesh axis,
+                         decode micro-steps streamed with
+                         collective_permute (the paper's 6-FPGA encoder
+                         pipeline)
+  --plan none            single-device (debug)
+
+`--dryrun` prints the chosen plan's per-leaf shardings (params + serving
+cache) and exits, so a deploy is inspectable before anything runs:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
-      --requests 16 --rate 50
+      --plan serve --mesh 1,8 --dryrun
 """
 from __future__ import annotations
 
@@ -25,7 +37,64 @@ from repro.launch.mesh import make_mesh
 from repro.models.transformer import init_params, make_model
 from repro.runtime.stragglers import StragglerMonitor
 from repro.serving.engine import ContinuousBatchingEngine, WaveEngine
+from repro.serving.kv_manager import paged_eligible
 from repro.serving.stream import poisson_requests, shared_prefix_requests
+
+
+def _parse_mesh(spec: str, plan_mode: str):
+    """--mesh "1,8" -> (data, model) mesh; --mesh "8" under serve_pipeline
+    -> (stage,) mesh.  Default: all visible devices on the plan's TP/stage
+    axis."""
+    n_dev = jax.device_count()
+    if plan_mode == "serve_pipeline":
+        shape = tuple(int(x) for x in spec.split(",")) if spec else (n_dev,)
+        if len(shape) != 1:
+            raise SystemExit("serve: serve_pipeline takes a 1-axis --mesh "
+                             "(the stage axis), e.g. --mesh 8")
+        return make_mesh(shape, ("stage",))
+    shape = tuple(int(x) for x in spec.split(",")) if spec else (1, n_dev)
+    if len(shape) != 2:
+        raise SystemExit("serve: --plan serve takes a 2-axis --mesh "
+                         "(data, model), e.g. --mesh 1,8")
+    return make_mesh(shape, ("data", "model"))
+
+
+def _print_shardings(title: str, specs, shapes) -> None:
+    print(f"-- {title} " + "-" * max(1, 60 - len(title)))
+
+    def walk(sp, sh, path=()):
+        if isinstance(sp, dict):
+            for k in sorted(sp):
+                walk(sp[k], sh[k], path + (k,))
+            return
+        print(f"  {'/'.join(path):<40} {str(tuple(sh.shape)):<22} {sp}")
+
+    walk(specs, shapes)
+
+
+def _dryrun(cfg, plan, paged: bool, engine_kw) -> None:
+    """Spec-only plan inspection: eval_shape everything, allocate nothing."""
+    model = make_model(cfg, remat=False)
+    params_shape = jax.eval_shape(
+        lambda k: init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jax.numpy.uint32))
+    plan.param_specs = plan.specs_for_params(params_shape)
+    print(f"serve --dryrun: arch={cfg.name} mode={plan.mode} "
+          f"mesh={dict(plan.mesh.shape)} paged={paged}")
+    _print_shardings("params", plan.param_specs, params_shape)
+    if paged:
+        ps = engine_kw.get("page_size", 16)
+        cache_shape = jax.eval_shape(
+            lambda: model.init_paged_cache(4, 64, ps, 8,
+                                           kv_dtype=engine_kw.get(
+                                               "kv_dtype", "bf16")))
+    else:
+        cache_shape = jax.eval_shape(lambda: model.init_cache(4, 64))
+    cache_specs = plan.specs_for_caches(cache_shape, batch=4,
+                                        slot_table=True, paged=paged)
+    _print_shardings("serving cache" + (" (paged arena)" if paged else
+                                        " (dense slots)"),
+                     cache_specs, cache_shape)
 
 
 def main(argv=None):
@@ -41,16 +110,26 @@ def main(argv=None):
     ap.add_argument("--decode-horizon", type=int, default=8,
                     help="max fused decode steps per dispatch (1 = the "
                          "one-dispatch-per-token baseline; docs/perf.md)")
+    ap.add_argument("--plan", choices=["none", "serve", "serve_pipeline"],
+                    default="serve",
+                    help="Cluster-Builder placement mode (docs/serving.md)")
+    ap.add_argument("--mesh", default="",
+                    help="mesh shape, e.g. 1,8 for (data, model) or 8 for "
+                         "the serve_pipeline stage axis; default spans all "
+                         "visible devices")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="print the chosen plan's per-leaf shardings "
+                         "(params + serving cache) and exit")
     ap.add_argument("--no-plan", action="store_true",
-                    help="skip Cluster-Builder placement (debug)")
+                    help="deprecated alias for --plan none")
     ap.add_argument("--stream", choices=["poisson", "shared-prefix"],
                     default="poisson",
                     help="shared-prefix: one system prompt + unique tails "
                          "(the radix prefix cache's target ingress)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged-KV page length (rows); paged mode is "
-                         "auto-enabled for all-attention models without a "
-                         "plan (docs/serving.md)")
+                         "auto-enabled for all-attention models under no "
+                         "plan or a serve plan (docs/serving.md)")
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV page-pool size (0 = match the dense slot "
                          "table's capacity)")
@@ -60,38 +139,42 @@ def main(argv=None):
                          "HBM per token (docs/serving.md §kv_dtype)")
     ap.add_argument("--quant-weights", action="store_true",
                     help="serve W8A8: projections/MLP run int8 x int8 -> "
-                         "int32 (models/quantized.py); with --kv-dtype "
-                         "int8 the decode loop is integer-dominant")
+                         "int32 (models/quantized.py); composes with any "
+                         "--plan (specs derive from the quantized tree)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.no_plan:
+        args.plan = "none"
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    model = make_model(cfg, remat=False)
-    params = init_params(cfg, jax.random.PRNGKey(args.seed))
     if args.kv_dtype == "int8" and args.engine != "cb":
         raise SystemExit(
             "serve: --kv-dtype int8 needs the continuous-batching engine "
-            "(the wave baseline decodes dense slot rows, which have no "
-            "quantized variant); drop --engine wave")
-    if args.kv_dtype == "int8" and not args.no_plan:
-        # int8 KV rides the paged pool, which doesn't compose with plan
-        # sharding (slot tables do); same restriction paged="auto" applies
-        print("serve: --kv-dtype int8 implies --no-plan (paged KV pool)")
-        args.no_plan = True
-    if args.quant_weights and not args.no_plan:
-        # plan.param_specs are derived from the bf16 leaf tree; the
-        # quantized {"q","s"} leaves have no specs yet (engine raises)
-        print("serve: --quant-weights implies --no-plan (param specs "
-              "cover the bf16 leaf tree only)")
-        args.no_plan = True
+            "(the wave baseline decodes dense slot rows); drop --engine wave")
+
     plan = None
-    if not args.no_plan:
-        n_dev = jax.device_count()
-        mesh = make_mesh((1, n_dev), ("data", "model"))
-        plan = build_plan(cfg, mesh, jax.eval_shape(lambda: params),
-                          mode="serve")
+    if args.plan != "none":
+        mesh = _parse_mesh(args.mesh, args.plan)
+        plan = build_plan(cfg, mesh, mode=args.plan)
+    # the engine's own paged="auto" predicate, shared so the CLI's int8
+    # guard and --dryrun can never disagree with what the engine does
+    paged = paged_eligible(cfg, plan) and args.engine == "cb"
+    if args.kv_dtype == "int8" and not paged:
+        raise SystemExit(
+            "serve: --kv-dtype int8 needs the paged pool (all-attention "
+            "model under --plan none or serve)")
+    if args.dryrun:
+        if plan is None:
+            raise SystemExit("serve: --dryrun inspects a plan; pick "
+                             "--plan serve or serve_pipeline")
+        _dryrun(cfg, plan, paged,
+                dict(page_size=args.page_size, kv_dtype=args.kv_dtype))
+        return []
+
+    model = make_model(cfg, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
     monitor = StragglerMonitor()
     cls = ContinuousBatchingEngine if args.engine == "cb" else WaveEngine
     kw = {}
@@ -124,8 +207,8 @@ def main(argv=None):
     toks = sum(len(r.tokens_out) for r in done)
     lat = sorted((r.t_done - r.t_enqueue) * 1e3 for r in done)
     ttft = sorted((r.t_first_token - r.t_enqueue) * 1e3 for r in done)
-    print(f"serve[{args.engine}]: arch={cfg.name} requests={len(done)} "
-          f"tokens={toks} wall={wall*1e3:.0f}ms "
+    print(f"serve[{args.engine}]: arch={cfg.name} plan={args.plan} "
+          f"requests={len(done)} tokens={toks} wall={wall*1e3:.0f}ms "
           f"throughput={toks/wall:.1f}tok/s "
           f"ttft_p50={ttft[len(ttft)//2]:.0f}ms "
           f"p50={lat[len(lat)//2]:.0f}ms p_max={lat[-1]:.0f}ms "

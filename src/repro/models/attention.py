@@ -224,7 +224,9 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
     """
     from repro.kernels import ops as kops
     from repro.models.layers import dense
-    from repro.models.shard_hints import fsdp_int8_gather, hint
+    from repro.models.shard_hints import (
+        fsdp_int8_gather, hint, paged_shard_ctx,
+    )
 
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     wq = fsdp_int8_gather(p["wq"], tp_dim=1)  # no-op unless enabled
@@ -323,16 +325,28 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
         # tests/test_quant_kv.py; the jnp fallback is the gather oracle
         # (bitwise equal to the dense ref path on equal logical lengths)
         route = "pallas" if (impl == "pallas" and cfg.causal) else "ref"
+        # plan-sharded serving (serve_exact hints context): the arena's
+        # kv-head dim is partitioned over `model`, so the decode kernel
+        # dispatch runs under shard_map — each model shard walks the
+        # (replicated) page table over its own kv heads, the SPMD form of
+        # the paper's per-head dotprod_softmax kernels behind the scatter
+        # GMI.  Falls back to the unsharded call when the head counts
+        # don't divide the axis (the plan replicated the arena then too).
+        mesh_kw = {}
+        ctx = paged_shard_ctx()
+        if ctx is not None and nkv % ctx[2] == 0 and nh % ctx[2] == 0:
+            mesh_kw = {"mesh": ctx[0], "axis": ctx[1]}
         if quantized:
             out = kops.paged_flash_decode_q(
                 qs[:, 0], ck, cv, cks, cvs, kpos, page_table, cpos,
-                active=act, impl=route)[:, None]
+                active=act, impl=route, **mesh_kw)[:, None]
             new_cache = {"k": ck, "v": cv, "k_scale": cks, "v_scale": cvs,
                          "kpos": kpos}
         else:
             out = kops.paged_flash_decode(
                 qs[:, 0], ck.astype(q.dtype), cv.astype(q.dtype), kpos,
-                page_table, cpos, active=act, impl=route)[:, None]
+                page_table, cpos, active=act, impl=route,
+                **mesh_kw)[:, None]
             new_cache = {"k": ck, "v": cv, "kpos": kpos}
     else:
         # decode: Sq == 1; the token's absolute position comes from the
@@ -368,7 +382,10 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
                                    cv.astype(q.dtype), msk)
         new_cache = {"k": ck, "v": cv, "kpos": kpos}
 
-    out = out.reshape(x.shape[0], x.shape[1], nh * hd)
+    # serve_exact plans gather the head outputs here (the Fig. 14 gather
+    # GMI before linear_o) so the replicated wo contraction is bit-exact;
+    # a no-op everywhere else
+    out = hint(out.reshape(x.shape[0], x.shape[1], nh * hd), "gather")
     wo = fsdp_int8_gather(p["wo"], tp_dim=0)
     return dense(out, wo), new_cache
 

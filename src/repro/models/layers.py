@@ -114,7 +114,9 @@ def mlp(x: jax.Array, p: Params, cfg) -> jax.Array:
         h = a(hint(dense(x, fsdp_int8_gather(p["wg"], tp_dim=1)), "btf")) * h
     else:
         h = a(h)
-    return dense(h, wo)
+    # serve_exact plans gather the f-sharded activation so the replicated
+    # down-projection is bit-exact (no psum); a no-op everywhere else
+    return dense(hint(h, "gather"), wo)
 
 
 # -- embedding / head -------------------------------------------------------

@@ -31,11 +31,20 @@ def _cfg() -> Optional[Dict]:
 
 @contextmanager
 def hints(mesh, dp_axes: Tuple[str, ...] = ("data",), tp_axis: str = "model",
-          int8_gather: bool = False):
+          int8_gather: bool = False, serve_exact: bool = False):
     """Enable activation constraints for code run inside this context.
 
     int8_gather=True turns FSDP weight all-gathers at `fsdp_int8_gather`
-    call sites into int8 transfers (§Perf B2)."""
+    call sites into int8 transfers (§Perf B2).
+
+    serve_exact=True is the serving executor's bit-exact TP contract
+    (cluster_builder serve mode): it (a) arms the `hint(x, "gather")`
+    call sites before the replicated reduction projections, forcing the
+    sharded activation to all-gather instead of leaving XLA free to pick a
+    partial-dot + psum whose summation order differs from single-device
+    math, and (b) publishes the mesh via `paged_shard_ctx()` so attention
+    can run the paged decode kernels under shard_map with the head axis
+    partitioned."""
     prev = _cfg()
     _state.cfg = {
         "mesh": mesh,
@@ -44,11 +53,22 @@ def hints(mesh, dp_axes: Tuple[str, ...] = ("data",), tp_axis: str = "model",
         "tp": tp_axis,
         "tp_n": mesh.shape[tp_axis],
         "int8_gather": int8_gather,
+        "serve_exact": serve_exact,
     }
     try:
         yield
     finally:
         _state.cfg = prev
+
+
+def paged_shard_ctx() -> Optional[Tuple]:
+    """(mesh, tp_axis, tp_n) when a serve_exact hints context is active —
+    the signal for attention to dispatch the paged decode kernels under
+    shard_map (page table replicated, head axis partitioned)."""
+    c = _cfg()
+    if c is None or not c.get("serve_exact") or c["tp_n"] <= 1:
+        return None
+    return c["mesh"], c["tp"], c["tp_n"]
 
 
 def _prod(it):
@@ -62,7 +82,9 @@ def hint(x: jax.Array, kind: str) -> jax.Array:
     """kind: 'btd' (batch-only, any rank) | 'bshd' (B,S,heads,hd) |
     'btf'/'btv' (B,S,model-dim-last) | 'bsni' (B,S,nh,inner: last over tp) |
     'moe' (B,experts,cap,d) | 'state' (batch-only, any rank) |
-    'last' (batch + last dim over tp, any rank)."""
+    'last' (batch + last dim over tp, any rank) |
+    'gather' (serve_exact only: all-gather the tp axis before a replicated
+    reduction projection)."""
     c = _cfg()
     if c is None:
         return x
@@ -73,7 +95,16 @@ def hint(x: jax.Array, kind: str) -> jax.Array:
 
     b = fit(x.shape[0], dp, c["dp_n"])
     nd = x.ndim
-    if kind in ("btd", "state"):
+    if kind == "gather":
+        # the GMI gather before a replicated reduction projection
+        # (serve_exact only): release the tp axis so the next dense() runs
+        # replicated — bit-identical to single-device — instead of
+        # partial-dot + psum.  A no-op outside serve_exact contexts, where
+        # the psum form is the right (cheaper) choice for training.
+        if not c.get("serve_exact"):
+            return x
+        spec = P(*((b,) + (None,) * (nd - 1)))
+    elif kind in ("btd", "state"):
         spec = P(*((b,) + (None,) * (nd - 1)))
     elif kind == "bshd":
         h_ax = fit(x.shape[2], tp, c["tp_n"])

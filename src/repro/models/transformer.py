@@ -210,6 +210,22 @@ def paged_cache_map(fn, *trees):
             for k in trees[0]}
 
 
+def greedy_token_update(logits, cur, active, remaining, eos_id, pad_token):
+    """One step of the fused decode loop's token state machine (no forced
+    queue): greedy argmax, -1 emission for masked lanes, EOS/budget lane
+    exit, pad feedback.  Shared verbatim by `Model.decode_steps` and the
+    serving executor's pipelined decode program, so the two are
+    bit-identical by construction.  Returns (emit, cur, active, remaining).
+    """
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    emit = jnp.where(active, nxt, -1)
+    remaining = jnp.where(active, remaining - 1, remaining)
+    still = active & (nxt != eos_id) & (remaining > 0)
+    # finished/free lanes feed the pad token, never a stale sample
+    cur = jnp.where(still, nxt, pad_token).astype(jnp.int32)
+    return emit, cur, still, remaining
+
+
 # ---------------------------------------------------------------------------
 # full model
 # ---------------------------------------------------------------------------
@@ -511,13 +527,8 @@ class Model:
                 cur, act, rem, caches = carry
                 logits, caches = self.decode_step(params, caches, cur,
                                                   active=act)
-                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-                emit = jnp.where(act, nxt, -1)
-                rem = jnp.where(act, rem - 1, rem)
-                still = act & (nxt != eos_id) & (rem > 0)
-                # finished/free lanes feed the pad token, never a stale
-                # sample
-                cur = jnp.where(still, nxt, pad_token).astype(jnp.int32)
+                emit, cur, still, rem = greedy_token_update(
+                    logits, cur, act, rem, eos_id, pad_token)
                 return (cur, still, rem, caches), emit
 
             (cur, act, rem, caches), toks = jax.lax.scan(

@@ -1,5 +1,19 @@
-from repro.runtime.fault_tolerance import (  # noqa: F401
-    FailureInjector, SimulatedFailure, run_with_recovery,
-)
-from repro.runtime.stragglers import StragglerMonitor  # noqa: F401
-from repro.runtime.elastic import elastic_mesh_shape  # noqa: F401
+"""Runtime package.  Lazy re-exports (PEP 562): fault_tolerance/elastic
+pull jax, but stragglers (AdmissionDeadline, StragglerMonitor) is plain
+host code the jax-free serving scheduler depends on — importing
+`repro.runtime.stragglers` must not drag the accelerator stack in."""
+
+_LAZY = {
+    "FailureInjector": "repro.runtime.fault_tolerance",
+    "SimulatedFailure": "repro.runtime.fault_tolerance",
+    "run_with_recovery": "repro.runtime.fault_tolerance",
+    "StragglerMonitor": "repro.runtime.stragglers",
+    "elastic_mesh_shape": "repro.runtime.elastic",
+}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(name)

@@ -1,3 +1,13 @@
-from repro.serving.engine import (  # noqa: F401
-    ContinuousBatchingEngine, EngineBase, Request, ServingEngine, WaveEngine,
-)
+"""Serving package: engine (composition root) + scheduler / executor /
+kv_manager layers.  The re-export is lazy (PEP 562) so the host-side
+layers (scheduler, kv_manager) stay importable without pulling jax."""
+
+_ENGINE_API = ("ContinuousBatchingEngine", "EngineBase", "Request",
+               "ServingEngine", "WaveEngine")
+
+
+def __getattr__(name):
+    if name in _ENGINE_API:
+        from repro.serving import engine
+        return getattr(engine, name)
+    raise AttributeError(name)

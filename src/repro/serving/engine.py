@@ -1,178 +1,68 @@
-"""Serving stack: slot-based continuous batching driven by the Cluster plan.
+"""Serving engines: the composition root over the three serving layers.
 
-The paper's deployment is a spatial pipeline fed at line rate (§8.2):
-requests stream through the 6-FPGA encoder cluster continuously, never
-waiting for a "wave" to fill.  The engine mirrors that with *slots*:
-
-  * a persistent KV cache with `max_batch` slot rows, allocated once per
-    (slot, cache_len) shape and sharded by the Cluster-Builder serve-mode
-    cache specs (`build_plan(..., mode="serve")`);
-  * prefill-on-admission: a freed slot is refilled between decode steps by
-    a batch-1 bucketed prefill whose cache is written into the slot row via
-    a jitted `insert_prefill_cache` — the rest of the batch keeps decoding,
-    nothing is torn down;
-  * an admission policy (core/packing.AdmissionPolicy) that orders waiting
-    requests by deadline overdue-ness (runtime/stragglers.AdmissionDeadline)
-    then bucket warmth, so steady state never stalls on a prefill compile;
-  * plan-aware execution: with a `ClusterPlan`, params and the slot cache
-    are placed with `jax.device_put` under the plan's `NamedSharding`s and
-    prefill/decode are jitted with `in_shardings`/`out_shardings` — the
-    engine is the runtime consumer of the Cluster Builder's serve plan.
-
-Decode runs on a *horizon*: each dispatch is a fused on-device loop
-(`Model.decode_steps` — decode, greedy argmax, feed back, EOS/budget lane
-masking, all under one jit) of up to `decode_horizon` steps, and the host
-fetches one (n, B) int32 token block instead of one (B, V) logits array per
-token.  The horizon is picked adaptively from admission pressure: with
-waiting requests it stops at the next predicted completion so a slot frees
-at the earliest boundary; with a drained queue it runs long.  Admissions
-and completions are reconciled only at horizon boundaries; between them
-the decode state (current token, active lanes, budgets) never leaves the
-device.  `decode_horizon=1` reproduces the one-dispatch-per-token
-scheduler and is the measured baseline in `benchmarks/run.py serve_cb`.
-
-With ``paged=True`` (auto-enabled for all-attention models) the dense
-per-slot rows give way to a *paged KV pool*: a global page arena addressed
-through per-lane page tables, a free-list allocator and a radix prefix
-cache (core/packing), prefix-hit admissions that skip prefill by ingesting
-the un-hit suffix through the decode loop's forced-token queue, and
-page-aware admission with LRU prefix eviction and preempt-to-free
-(docs/serving.md §paged KV).
-
-`WaveEngine` keeps the seed's batch-synchronous scheduler (one batched
-prefill, decode to the slowest request) as the measured baseline for the
-`benchmarks/run.py serve_cb` comparison; its inner loop rides the same
-fused horizon programs.
+serving/scheduler.py holds host-side policy only (admission ordering, the
+decode-horizon ladder, preemption choice, stream reconciliation — no
+jax); serving/executor.py holds every jitted program plus plan placement
+(the `mode="serve"` kv-head-sharded paged path and the
+`mode="serve_pipeline"` stage-streaming decode); serving/kv_manager.py
+owns paged-KV memory (page pool, radix prefix cache, page tables).  This
+module wires the three together behind the old monolith's public API
+(semantics in docs/serving.md).
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.core.packing import AdmissionPolicy, bucket_len
+from repro.core.packing import bucket_len
 from repro.models.transformer import Model
-from repro.runtime.stragglers import AdmissionDeadline, StragglerMonitor
+from repro.runtime.stragglers import StragglerMonitor
+from repro.serving.executor import PAD_TOKEN, Executor
+from repro.serving.kv_manager import (KVManager, kv_page_bytes,
+                                      num_pages_for_hbm, paged_eligible)
+from repro.serving.scheduler import Request, Scheduler
 
-PAD_TOKEN = 0  # fed for finished/free slot rows; their logits are never read
-
-
-def kv_page_bytes(cfg, page_size: int, kv_dtype: str) -> int:
-    """HBM bytes one KV arena page costs across the whole layer stack —
-    the unit for equal-HBM pool sizing (docs/perf.md §int8 pages).
-
-    bf16: 2 (k+v) * KVH * hd elements at 2 B per cache row; int8: the same
-    elements at 1 B plus 2 * KVH f32 scales per row, i.e. (hd+4)/(2*hd) of
-    the bf16 bytes — a fixed budget holds ~2x the pages at hd=64.
-    """
-    per_row = 2 * cfg.n_kv_heads * cfg.head_dim  # k+v elements
-    if kv_dtype == "int8":
-        row_bytes = per_row + 2 * cfg.n_kv_heads * 4  # values + f32 scales
-    else:
-        row_bytes = per_row * 2
-    return cfg.n_layers * page_size * row_bytes
-
-
-@dataclass(eq=False)  # identity equality: rid is caller-chosen, prompt is a
-class Request:        # numpy array (== would be ambiguous), requests mutate
-    rid: int
-    prompt: np.ndarray  # (len,) int32
-    max_new_tokens: int = 16
-    eos_id: int = -1  # -1: never
-    t_arrival: float = 0.0  # seconds after engine start (Poisson streams)
-    tokens_out: List[int] = field(default_factory=list)
-    done: bool = False
-    t_enqueue: float = 0.0
-    t_admitted: float = 0.0
-    t_first_token: float = 0.0
-    t_done: float = 0.0
-
-    def append_token(self, tok: int, now: float) -> None:
-        assert not self.done, \
-            f"request {self.rid}: token appended after done"
-        if not self.tokens_out:
-            self.t_first_token = now
-        self.tokens_out.append(int(tok))
-        if tok == self.eos_id or len(self.tokens_out) >= self.max_new_tokens:
-            self.done = True
-            self.t_done = now
+__all__ = ["ContinuousBatchingEngine", "WaveEngine", "ServingEngine",
+           "Request", "EngineBase", "PAD_TOKEN", "kv_page_bytes",
+           "num_pages_for_hbm"]
 
 
 class EngineBase:
-    """Shared plumbing: plan placement, jit caches, bucketed prefill."""
+    """Shared composition: scheduler + executor, stats, prefill plumbing."""
 
     def __init__(self, model: Model, params, max_batch: int = 8,
                  buckets=(32, 64, 128, 256), greedy: bool = True,
                  deadline_s: float = 0.05, plan=None,
-                 max_decode_len: int = 64,
-                 decode_horizon: int = 8,
+                 max_decode_len: int = 64, decode_horizon: int = 8,
                  monitor: Optional[StragglerMonitor] = None,
                  quant_weights: bool = False):
         self.model = model
-        # int8 weight path (models/quantized.py): the decode-step
-        # projections/MLP run W8A8 through dense()'s quantized dispatch —
-        # with kv_dtype="int8" on top the whole decode loop is
-        # integer-dominant, the paper's I-BERT datapath at serving scale
-        self.quant_weights = bool(quant_weights)
-        if self.quant_weights:
-            if plan is not None:
-                raise ValueError(
-                    "quant_weights does not compose with a ClusterPlan yet:"
-                    " plan.param_specs are derived from the bf16 leaf tree")
-            from repro.models.quantized import quantize_params_for_serving
-            params = quantize_params_for_serving(params)
         self.max_batch = max_batch
         self.buckets = tuple(sorted(buckets))
         self.greedy = greedy
         self.plan = plan
         self.monitor = monitor
-        self.policy = AdmissionPolicy(
-            buckets=self.buckets, lane=8,
-            deadline=AdmissionDeadline(deadline_s))
-        # slot rows hold prompt KV + decode headroom; fixed so the decode
-        # program compiles exactly once per engine
+        self.quant_weights = bool(quant_weights)
+        self.paged = False  # ContinuousBatchingEngine may flip this
+        # slot rows: prompt KV + decode headroom, fixed per engine
         self.cache_len = bucket_len(max(self.buckets), self.buckets,
                                     lane=8) + max_decode_len
-        # decode-horizon ladder: each fused dispatch runs up to
-        # `decode_horizon` on-device decode steps (Model.decode_steps) and
-        # ships one (n, B) token block back; powers of two bound the number
-        # of compiled horizon programs.  decode_horizon=1 is the measured
-        # one-dispatch-per-token baseline (docs/perf.md).
-        assert decode_horizon >= 1
         self.decode_horizon = decode_horizon
-        self.paged = False  # ContinuousBatchingEngine may flip this
-        self._horizons = [h for h in (1, 2, 4, 8, 16, 32, 64, 128)
-                          if h <= decode_horizon] or [1]
-        self._queue: List[Request] = []
-        self._jit_prefill: Dict = {}
-        self._jit_decode_steps: Dict[int, Callable] = {}
-        self._jit_insert: Optional[Callable] = None
-        self._jit_admit_lane: Optional[Callable] = None
-        # decode_steps: on-device scan steps; decode_dispatches: fused jit
-        # calls; device_syncs: host<->device round-trips (token-block and
-        # first-token fetches) — the quantity the horizon amortizes
+        self.sched = Scheduler(self.buckets, deadline_s, decode_horizon,
+                               max_batch)
+        self.executor = Executor(model, params, plan=plan,
+                                 quant_weights=quant_weights,
+                                 max_batch=max_batch,
+                                 cache_len=self.cache_len,
+                                 buckets=self.buckets)
         self.stats = {"prefill_tokens": 0, "decode_steps": 0,
                       "decode_dispatches": 0, "device_syncs": 0}
 
-        self._param_shardings = None
-        self._cache_shardings = None
-        self._rep = None
-        if plan is not None:
-            if plan.param_specs is None:
-                plan.param_specs = plan.specs_for_params(
-                    jax.eval_shape(lambda: params))
-            self._param_shardings = jax.tree.map(plan.sharding,
-                                                 plan.param_specs)
-            self._rep = plan.sharding(P())
-            params = jax.device_put(params, self._param_shardings)
-        self.params = params
-
-    # -- public ---------------------------------------------------------------
+    params = property(lambda self: self.executor.params)
+    policy = property(lambda self: self.sched.policy)
 
     def submit(self, req: Request) -> None:
         need = self.policy.bucket_of(len(req.prompt)) + req.max_new_tokens
@@ -180,160 +70,16 @@ class EngineBase:
             raise ValueError(
                 f"request {req.rid}: bucket+budget {need} exceeds slot "
                 f"cache_len {self.cache_len} (raise max_decode_len)")
-        if self.paged and self.pool.pages_for(need) > self.pool.num_pages - 1:
+        if self.paged and self.kv.pages_for(need) > self.kv.num_pages - 1:
             raise ValueError(
-                f"request {req.rid}: needs {self.pool.pages_for(need)} pages,"
-                f" pool has {self.pool.num_pages - 1} (raise num_pages)")
-        req.t_enqueue = time.perf_counter()
-        self._queue.append(req)
+                f"request {req.rid}: needs {self.kv.pages_for(need)} pages,"
+                f" pool has {self.kv.num_pages - 1} (raise num_pages)")
+        self.sched.enqueue(req)
 
-    def run(self) -> List[Request]:
-        raise NotImplementedError
-
-    # -- jitted programs ------------------------------------------------------
-
-    def _prefill_fn(self, bucket: int, batch: int, cache_slots: int):
-        key = (bucket, batch, cache_slots)
-        if key not in self._jit_prefill:
-            model = self.model
-
-            def fn(params, tokens, positions, lengths):
-                caches = model.init_cache(batch, cache_slots)
-                logits, caches = model.prefill(
-                    params, caches, tokens=tokens, positions=positions,
-                    last_idx=lengths - 1)
-                return logits, caches
-
-            kw = {}
-            if self.plan is not None:
-                kw["in_shardings"] = (self._param_shardings, self._rep,
-                                      self._rep, self._rep)
-            self._jit_prefill[key] = jax.jit(fn, **kw)
-        return self._jit_prefill[key]
-
-    def _decode_steps_fn(self, n: int):
-        """Fused n-step decode program (compiled once per horizon length;
-        jax.jit re-specializes per batch shape for the wave engine's
-        variable waves).  The paged variant threads the forced-token queue
-        (prefix-hit suffix ingest) through the same fused loop."""
-        if n not in self._jit_decode_steps:
-            model = self.model
-            if self.paged:
-
-                def pfn(params, caches, token, active, eos, budget,
-                        forced, flen, fptr):
-                    return model.decode_steps(
-                        params, caches, token, active, n, eos_id=eos,
-                        budget=budget, pad_token=PAD_TOKEN, forced=forced,
-                        forced_len=flen, forced_ptr=fptr)
-
-                self._jit_decode_steps[n] = jax.jit(pfn, donate_argnums=(1,))
-                return self._jit_decode_steps[n]
-
-            def fn(params, caches, token, active, eos, budget):
-                return model.decode_steps(params, caches, token, active, n,
-                                          eos_id=eos, budget=budget,
-                                          pad_token=PAD_TOKEN)
-
-            kw = {}
-            if self.plan is not None:
-                kw["in_shardings"] = (self._param_shardings,
-                                      self._cache_shardings, self._rep,
-                                      self._rep, self._rep, self._rep)
-                kw["out_shardings"] = (self._rep, self._rep, self._rep,
-                                       self._rep, self._cache_shardings)
-            self._jit_decode_steps[n] = jax.jit(fn, donate_argnums=(1,),
-                                                **kw)
-        return self._jit_decode_steps[n]
-
-    def _admit_lane_fn(self):
-        """One fused update of the device decode state for an admission
-        (four eager .at[].set dispatches cost ~4x this on small hosts)."""
-        if self._jit_admit_lane is None:
-
-            def fn(cur, active, eos, budget, sl, tok, eos_id, bud):
-                return (cur.at[sl].set(tok), active.at[sl].set(True),
-                        eos.at[sl].set(eos_id), budget.at[sl].set(bud))
-
-            self._jit_admit_lane = jax.jit(fn, donate_argnums=(0, 1, 2, 3))
-        return self._jit_admit_lane
-
-    def _pick_horizon(self, waiting: bool, remaining: List[int]) -> int:
-        """Adaptive decode horizon from admission pressure.
-
-        With `waiting` requests, aim for the next *predicted* completion
-        (min remaining budget) so a slot frees — and is refilled — at the
-        earliest useful horizon boundary, floored at 4 steps so dispatch
-        overhead stays amortized (a completion can overshoot by at most 3
-        masked slot-steps); with a drained queue run up to the longest
-        remaining budget.  EOS can still end a lane mid-horizon; those
-        lanes decode masked until the boundary (wasted slot-steps, never
-        wrong tokens)."""
-        if waiting:
-            target = max(min(remaining), min(4, self.decode_horizon))
-        else:
-            target = max(remaining)
-        n = 1
-        for h in self._horizons:
-            if h <= max(1, target):
-                n = h
-        return n
-
-    def _append_block(self, block: np.ndarray, requests, now: float) -> None:
-        """Reconcile one fetched (n, B) token block into request streams.
-
-        -1 marks a step at which the lane emitted nothing: a free slot, a
-        lane that early-exited on device after EOS/budget (-1 *suffix*), or
-        a prefix-hit lane still ingesting its prompt suffix through the
-        forced-token queue (-1 *prefix*) — so -1 entries are skipped, not
-        treated as end-of-block.  Device-side masking mirrors
-        `Request.append_token`'s done rule, so the host appends every
-        non-negative token until its own done flag flips; nothing real can
-        follow a lane's device-side exit."""
-        for i, r in enumerate(requests):
-            if r is None or r.done:
-                continue
-            for tok in block[:, i]:
-                if tok < 0:
-                    continue
-                r.append_token(int(tok), now)
-                if r.done:
-                    break
-
-    def _prefill_batch(self, wave: List[Request], batch: int,
-                       bucket_cache: bool = False):
-        """Bucketed left-aligned batched prefill; returns (logits, caches).
-
-        bucket_cache=True writes a bucket-sized cache (the slot engine's
-        admission path: `insert_prefill_cache` pads it up to the slot row);
-        otherwise the cache has the full cache_len the wave engine decodes
-        into directly.
-        """
-        return self._prefill_prompts([r.prompt for r in wave], batch,
-                                     bucket_cache=bucket_cache)
-
-    def _prefill_prompts(self, prompts: List[np.ndarray], batch: int,
-                         bucket_cache: bool = False):
-        """`_prefill_batch` over raw token arrays (the paged engine
-        prefills *effective* prompts — original prompt + tokens already
-        generated before a preemption — which belong to no Request)."""
-        maxlen = max(len(p) for p in prompts)
-        bucket = bucket_len(maxlen, self.buckets, lane=8)
-        cache_slots = bucket if bucket_cache else self.cache_len
-        toks = np.zeros((batch, bucket), np.int32)
-        # pad positions = 2^30 so the causal mask can never attend to them
-        # (and cache slot i == position i for decode)
-        pos = np.full((batch, bucket), 2 ** 30, np.int32)
-        lengths = np.ones((batch,), np.int32)
-        for i, p in enumerate(prompts):
-            n = len(p)
-            toks[i, :n] = p
-            pos[i, :n] = np.arange(n)
-            lengths[i] = n
+    def _prefill(self, prompts, batch: int, bucket_cache: bool = False):
         self.stats["prefill_tokens"] += int(sum(len(p) for p in prompts))
-        return self._prefill_fn(bucket, batch, cache_slots)(
-            self.params, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(lengths))
+        return self.executor.prefill_prompts(prompts, batch,
+                                             bucket_cache=bucket_cache)
 
     def _greedy_next(self, logits) -> np.ndarray:
         self.stats["device_syncs"] += 1
@@ -343,56 +89,29 @@ class EngineBase:
 class ContinuousBatchingEngine(EngineBase):
     """Slot-asynchronous scheduler: admit into freed slots between steps.
 
-    With ``paged=True`` (the default wherever it applies: all-attention
-    models, no sliding window, no ClusterPlan) the per-slot dense KV rows
-    are replaced by a global page arena (`core/packing.PagePool`) addressed
-    through per-lane page tables, plus a radix prefix cache
-    (`core/packing.RadixPrefixCache`): requests sharing a prompt prefix
-    reuse its KV pages copy-free and skip prefill for the covered
-    positions — the un-hit suffix is ingested through the fused decode
-    loop's forced-token queue, so a hit admission costs zero prefill
-    dispatches.  Admission is page-aware (admit while pages are available,
-    evict cached prefixes LRU under pressure, preempt-to-free as the last
-    resort) and `stats` gains prefix_hits / prefix_hit_tokens /
-    pages_in_use / pages_peak / preemptions / active_lane_steps.
-
-    ``kv_dtype="int8"`` stores the arena quantized (int8 k/v + per-row
-    f32 scale planes, core/quant.kv_quantize): ~half the HBM per resident
-    token, so an equal byte budget holds ~2x the pages — size pools
-    across dtypes with the module-level `kv_page_bytes`.  Decode
-    runs the `paged_flash_decode_q` kernel (in-VMEM dequant); prefix
-    pages share scales by construction (they live in the arena), so hit
-    admissions stay bit-identical to cold prefills.  Greedy streams match
-    bf16 to >=99% on confident models (docs/serving.md §kv_dtype for the
-    caveats); combine with ``quant_weights=True`` for an
-    integer-dominant decode loop.
-    """
+    ``paged`` (default "auto") swaps dense slot rows for the page arena +
+    radix prefix cache; ``kv_dtype="int8"`` quantizes the arena;
+    ``quant_weights=True`` serves W8A8 — all three compose with a
+    ClusterPlan, whose serve mode shards the arena's kv-head dim across
+    the mesh (docs/serving.md §sharded serving)."""
 
     def __init__(self, *args, paged="auto", page_size: int = 16,
                  num_pages: Optional[int] = None,
                  max_hit_suffix: Optional[int] = None,
                  kv_dtype: str = "bf16", **kw):
         super().__init__(*args, **kw)
-        # active_lane_steps / decode_steps = sustained concurrency (mean
-        # occupied lanes per decode step) — the capacity metric the paged
-        # pool is meant to raise at fixed HBM
         self.stats.update(admitted=0, completed=0, prefills=0,
                           active_lane_steps=0)
         self._slot_caches = None
-        from repro.core.packing import PagePool, RadixPrefixCache
-        from repro.models.transformer import layer_plan
-        cfg = self.model.cfg
-        _, _, kinds = layer_plan(cfg)
-        eligible = (all(k == "attn" for k in kinds)
-                    and not cfg.local_window and cfg.causal
-                    and self.plan is None)
+        eligible = paged_eligible(self.model.cfg, self.plan)
         if paged == "auto":
             paged = eligible
         elif paged and not eligible:
             raise ValueError(
                 "paged KV needs an all-attention, unwindowed, causal model "
-                "without a ClusterPlan (recurrent state and ring buffers "
-                "have no paged analogue; plan sharding covers slot tables)")
+                "(recurrent state and ring buffers have no paged analogue) "
+                "under no plan or a mode='serve' plan (serve_pipeline "
+                "streams the dense slot path)")
         self.paged = bool(paged)
         assert kv_dtype in ("bf16", "int8"), kv_dtype
         if kv_dtype == "int8" and not self.paged:
@@ -401,416 +120,136 @@ class ContinuousBatchingEngine(EngineBase):
                 "slot rows are not implemented); this model/config fell "
                 "back to dense slots")
         self.kv_dtype = kv_dtype
+        self.kv: Optional[KVManager] = None
         if self.paged:
             self.page_size = page_size
-            # round the per-lane logical capacity up to whole pages: the
-            # gathered paged layout then matches a dense slot row exactly
-            # (position p at logical row p), which is what makes paged and
-            # dense token streams directly comparable
+            # whole-page capacity: gathered paged layout == dense slot row
             self.cache_len = -(-self.cache_len // page_size) * page_size
+            self.executor.cache_len = self.cache_len
             self.max_pages = self.cache_len // page_size
-            if num_pages is None:
-                # default pool = the dense slot table's capacity (+ trash
-                # page): paging is then never the binding constraint.  Size
-                # num_pages down — or max_batch up at fixed pool bytes — to
-                # trade worst-case headroom for real concurrency
-                # (docs/perf.md has the HBM inventory).
+            if num_pages is None:  # default: dense table capacity + trash
                 num_pages = self.max_batch * self.max_pages + 1
-            self.pool = PagePool(num_pages, page_size)
-            self.prefix_cache = RadixPrefixCache(self.pool)
-            # a hit whose un-hit suffix exceeds this re-ingests too many
-            # tokens through the decode loop; one dense prefill is cheaper
+            self.kv = KVManager(num_pages, page_size, self.max_batch,
+                                self.max_pages)
             self.max_hit_suffix = (max(self.buckets)
                                    if max_hit_suffix is None
                                    else max_hit_suffix)
-            self._lane_pages: List[Optional[List[int]]] = \
-                [None] * self.max_batch
-            self._lane_forced = [0] * self.max_batch
-            self._jit_admit_cold: Dict = {}
-            self._jit_admit_hit = None
-            self._jit_admit_lane_paged = None
-            self._jit_park_lane = None
             self._ladder_warm = False
             self.stats.update(prefix_hits=0, prefix_hit_tokens=0,
                               preemptions=0, pages_in_use=0, pages_peak=0)
 
-    # -- internals ------------------------------------------------------------
+    pool = property(lambda self: self.kv.pool)
+    prefix_cache = property(lambda self: self.kv.prefix_cache)
+    _lane_pages = property(lambda self: self.kv._lane_pages)
 
     def kv_page_bytes(self) -> int:
-        """HBM bytes one arena page costs at this engine's kv_dtype (the
-        module-level `kv_page_bytes` bound to this engine's config)."""
+        """HBM bytes one arena page costs at this engine's kv_dtype."""
         return kv_page_bytes(self.model.cfg, self.page_size, self.kv_dtype)
 
-    def _init_slot_caches(self):
-        if self.paged:
-            return self.model.init_paged_cache(
-                self.max_batch, self.pool.num_pages, self.page_size,
-                self.max_pages, kv_dtype=self.kv_dtype)
-        caches = self.model.init_cache(self.max_batch, self.cache_len)
-        if self.plan is not None:
-            specs = self.plan.specs_for_caches(
-                jax.eval_shape(lambda: caches), batch=self.max_batch,
-                slot_table=True)
-            self._cache_shardings = jax.tree.map(self.plan.sharding, specs)
-            caches = jax.device_put(caches, self._cache_shardings)
-        return caches
-
-    def _insert_fn(self):
-        if self._jit_insert is None:
-            model = self.model
-
-            def fn(big, small, slot):
-                return model.insert_prefill_cache(big, small, slot)
-
-            kw = {}
-            if self.plan is not None:
-                kw["out_shardings"] = self._cache_shardings
-            self._jit_insert = jax.jit(fn, donate_argnums=(0,), **kw)
-        return self._jit_insert
-
-    def _admit(self, req: Request, slot: int, caches):
-        """Batch-1 prefill + jitted insert into `slot`; returns (caches, tok).
-
-        The first token comes straight from the prefill logits, so TTFT is
-        paid at admission, not at the next decode step.
-        """
-        logits, small = self._prefill_batch([req], 1, bucket_cache=True)
-        caches = self._insert_fn()(caches, small, slot)
+    def _admit_dense(self, r: Request, sl: int, st) -> bool:
+        """Batch-1 prefill + insert into slot `sl`; TTFT paid here."""
+        logits, small = self._prefill([r.prompt], 1, bucket_cache=True)
+        st["caches"] = self.executor.insert(st["caches"], small, sl)
         self.stats["prefills"] += 1
         self.stats["admitted"] += 1
-        return caches, int(self._greedy_next(logits)[0])
-
-    # -- paged internals ------------------------------------------------------
-
-    def _admit_cold_fn(self, bucket: int, n_wp: int):
-        key = (bucket, n_wp)
-        if key not in self._jit_admit_cold:
-            model = self.model
-
-            def fn(big, small, slot, pt_row, pos0, reset, wp):
-                return model.admit_lane_cache(big, slot, pt_row, pos0,
-                                              reset, small=small,
-                                              write_pages=wp)
-
-            self._jit_admit_cold[key] = jax.jit(fn, donate_argnums=(0,))
-        return self._jit_admit_cold[key]
-
-    def _admit_hit_fn(self):
-        if self._jit_admit_hit is None:
-            model = self.model
-
-            def fn(big, slot, pt_row, pos0, reset):
-                return model.admit_lane_cache(big, slot, pt_row, pos0, reset)
-
-            self._jit_admit_hit = jax.jit(fn, donate_argnums=(0,))
-        return self._jit_admit_hit
-
-    def _admit_lane_paged_fn(self):
-        """Fused device-state update for a paged admission: lane decode
-        state plus the forced-token (suffix-ingest) queue row."""
-        if self._jit_admit_lane_paged is None:
-
-            def fn(cur, active, eos, budget, forced, flen, fptr, sl, tok,
-                   eos_id, bud, frow, fl):
-                return (cur.at[sl].set(tok), active.at[sl].set(True),
-                        eos.at[sl].set(eos_id), budget.at[sl].set(bud),
-                        forced.at[sl].set(frow), flen.at[sl].set(fl),
-                        fptr.at[sl].set(0))
-
-            self._jit_admit_lane_paged = jax.jit(
-                fn, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
-        return self._jit_admit_lane_paged
-
-    def _park_lane_fn(self):
-        """Deactivate a lane on device (preemption): masked writes go to
-        the trash page from the next step on."""
-        if self._jit_park_lane is None:
-
-            def fn(cur, active, sl):
-                return cur.at[sl].set(PAD_TOKEN), active.at[sl].set(False)
-
-            self._jit_park_lane = jax.jit(fn, donate_argnums=(0, 1))
-        return self._jit_park_lane
-
-    def _effective_prompt(self, r: Request) -> np.ndarray:
-        """Prompt + tokens already generated: greedy decode is
-        deterministic, so a preempted request re-enters as if its output
-        so far had been part of the prompt and continues its stream."""
-        if not r.tokens_out:
-            return r.prompt
-        return np.concatenate(
-            [np.asarray(r.prompt, np.int32),
-             np.asarray(r.tokens_out, np.int32)])
+        self._first_token(r, int(self._greedy_next(logits)[0]))
+        if not r.done:
+            self.executor.admit_lane(st, sl, r.tokens_out[-1], r.eos_id,
+                                     r.remaining())
+        return True
 
     def _admit_paged(self, r: Request, sl: int, st) -> bool:
-        """Page-aware admission of `r` into lane `sl`.
-
-        Gate: enough free pages for the request's un-shared need, after
-        LRU-evicting cached prefixes.  On a radix hit the lane reuses the
-        shared pages (copy-on-write by page alignment: it only ever writes
-        pages it owns exclusively) and skips prefill entirely — the un-hit
-        suffix rides the decode loop's forced-token queue.  Returns False
-        (nothing mutated, lookup refs released) when the pool can't cover
-        it; the scheduler may then preempt-to-free.
-        """
-        pool = self.pool
-        prompt = self._effective_prompt(r)
-        rem_budget = r.max_new_tokens - len(r.tokens_out)
-        need_pages = pool.pages_for(len(prompt) + rem_budget)
-        hit_pages, hit_len = self.prefix_cache.lookup(prompt)
-        if hit_len and len(prompt) - hit_len > self.max_hit_suffix:
-            pool.decref(hit_pages)  # suffix too long: prefill is cheaper
-            hit_pages, hit_len = [], 0
-        own_need = need_pages - len(hit_pages)
-        if own_need > pool.free_pages:
-            self.prefix_cache.evict(own_need - pool.free_pages)
-        if own_need > pool.free_pages:
-            pool.decref(hit_pages)
+        """Radix hit -> reuse shared pages, suffix rides the forced-token
+        queue; cold -> bucket prefill scattered into owned pages + prompt
+        registered.  False = pool can't cover it (nothing held)."""
+        prompt = r.effective_prompt()
+        grant = self.kv.admit(prompt, r.remaining(), self.max_hit_suffix)
+        if grant is None:
             return False
-        own = pool.alloc(own_need)
-        pages = hit_pages + own
-        pt_row = np.zeros((self.max_pages,), np.int32)
-        pt_row[:len(pages)] = pages
-        reset = np.zeros((self.max_pages,), np.int32)  # trash-page padded
-        reset[:len(own)] = own
         self.stats["admitted"] += 1
-        if hit_len:
-            suffix = prompt[hit_len:]
-            st["caches"] = self._admit_hit_fn()(
-                st["caches"], sl, jnp.asarray(pt_row), hit_len,
-                jnp.asarray(reset))
-            frow = np.zeros((self.cache_len,), np.int32)
-            frow[:len(suffix) - 1] = suffix[1:]
-            (st["cur"], st["active"], st["eos"], st["budget"], st["forced"],
-             st["flen"], st["fptr"]) = self._admit_lane_paged_fn()(
-                st["cur"], st["active"], st["eos"], st["budget"],
-                st["forced"], st["flen"], st["fptr"], sl, int(suffix[0]),
-                r.eos_id, rem_budget, jnp.asarray(frow),
-                len(suffix) - 1)
-            self._lane_forced[sl] = len(suffix) - 1
+        if grant.hit_len:
+            suffix = prompt[grant.hit_len:]
+            self.executor.admit_hit(st, sl, grant.pt_row, grant.hit_len,
+                                    grant.reset)
+            self.executor.admit_lane_paged(st, sl, int(suffix[0]), r.eos_id,
+                                           r.remaining(), suffix[1:],
+                                           len(suffix) - 1)
+            self.sched.lane_forced[sl] = len(suffix) - 1
             self.stats["prefix_hits"] += 1
-            self.stats["prefix_hit_tokens"] += int(hit_len)
+            self.stats["prefix_hit_tokens"] += int(grant.hit_len)
             r.t_admitted = time.perf_counter()
         else:
-            logits, small = self._prefill_prompts([prompt], 1,
-                                                  bucket_cache=True)
+            logits, small = self._prefill([prompt], 1, bucket_cache=True)
             bucket = bucket_len(len(prompt), self.buckets, lane=8)
-            n_wp = min(self.pool.pages_for(bucket), len(pages))
-            st["caches"] = self._admit_cold_fn(bucket, n_wp)(
-                st["caches"], small, sl, jnp.asarray(pt_row), len(prompt),
-                jnp.asarray(reset), jnp.asarray(pages[:n_wp], np.int32))
+            n_wp = min(self.kv.pages_for(bucket), len(grant.pages))
+            self.executor.admit_cold(
+                st, sl, small, grant.pt_row, len(prompt), grant.reset,
+                np.asarray(grant.pages[:n_wp], np.int32), bucket)
             self.stats["prefills"] += 1
-            # register the prompt's full pages for future prefix hits —
-            # their KV is complete once the insert above runs (device
-            # program order also sequences it before any later reader);
-            # hit-path suffix pages are never registered because their KV
-            # fills in over later decode dispatches and a preemption could
-            # strand them half-written
-            self.prefix_cache.insert(prompt, pages)
-            tok = int(self._greedy_next(logits)[0])
-            t_now = time.perf_counter()
-            r.t_admitted = t_now
-            r.append_token(tok, t_now)
-            self._lane_forced[sl] = 0
+            self.kv.register_prefix(prompt, grant.pages)
+            self._first_token(r, int(self._greedy_next(logits)[0]))
+            self.sched.lane_forced[sl] = 0
             if not r.done:
-                (st["cur"], st["active"], st["eos"], st["budget"],
-                 st["forced"], st["flen"], st["fptr"]) = \
-                    self._admit_lane_paged_fn()(
-                        st["cur"], st["active"], st["eos"], st["budget"],
-                        st["forced"], st["flen"], st["fptr"], sl, tok,
-                        r.eos_id, r.max_new_tokens - len(r.tokens_out),
-                        jnp.zeros((self.cache_len,), jnp.int32), 0)
-        self._lane_pages[sl] = pages
-        self.stats["pages_in_use"] = self.pool.pages_in_use
+                self.executor.admit_lane_paged(
+                    st, sl, r.tokens_out[-1], r.eos_id, r.remaining(),
+                    np.zeros((0,), np.int32), 0)
+        self.kv.commit(sl, grant)
+        self.stats["pages_in_use"] = self.kv.pages_in_use
         self.stats["pages_peak"] = max(self.stats["pages_peak"],
-                                       self.pool.pages_in_use)
+                                       self.kv.pages_in_use)
         return True
 
-    def _release_lane(self, sl: int) -> None:
-        """Return lane `sl`'s page references to the pool (tree references
-        keep registered prefix pages alive for future hits)."""
-        if self._lane_pages[sl] is not None:
-            self.pool.decref(self._lane_pages[sl])
-            self._lane_pages[sl] = None
-        self._lane_forced[sl] = 0
-        self.stats["pages_in_use"] = self.pool.pages_in_use
+    @staticmethod
+    def _first_token(r: Request, tok: int) -> None:
+        t_now = time.perf_counter()
+        r.t_admitted = t_now
+        r.append_token(tok, t_now)
 
-    def _preempt(self, slots, pending, st) -> bool:
-        """Free pages by evicting the occupied lane with the most work
-        left (it holds the most still-unearned pages).  The victim is
-        re-queued with its stream intact — greedy decode is deterministic,
-        so re-admission (usually a prefix hit on its own registered pages)
-        continues exactly where it stopped."""
-        occ = [(i, r) for i, r in enumerate(slots) if r is not None]
-        if not occ:
-            return False
-        sl, victim = max(occ, key=lambda ir: ir[1].max_new_tokens
-                         - len(ir[1].tokens_out))
-        slots[sl] = None
-        st["cur"], st["active"] = self._park_lane_fn()(
-            st["cur"], st["active"], sl)
-        self._release_lane(sl)
+    def _release(self, sl: int) -> None:
+        self.kv.release(sl)
+        self.sched.lane_forced[sl] = 0
+        self.stats["pages_in_use"] = self.kv.pages_in_use
+
+    def _preempt(self, slots, pending, st) -> None:
+        """Evict the lane with the most work left; greedy decode is
+        deterministic, so the re-queued victim (usually a prefix hit on
+        its own pages) continues exactly where it stopped."""
+        sl = self.sched.victim(slots)
+        if sl is None:
+            return
+        victim, slots[sl] = slots[sl], None
+        self.executor.park_lane(st, sl)
+        self._release(sl)
         pending.append(victim)
         self.stats["preemptions"] += 1
-        return True
 
-    def _reconcile_dispatch(self, toks, slots, done, n: int,
-                            t_step: float) -> None:
-        """Shared per-dispatch bookkeeping for the dense and paged loops:
-        fetch the (n, B) token block (the only per-dispatch device sync),
-        account stats, mirror the paged suffix-ingest consumption, append
-        streams, and sweep completed lanes out of their slots."""
-        block = np.asarray(toks)
-        self.stats["decode_dispatches"] += 1
-        self.stats["decode_steps"] += n
-        self.stats["device_syncs"] += 1
-        self.stats["active_lane_steps"] += \
-            sum(r is not None for r in slots) * n
+    def _reconcile(self, toks, slots, done, n: int, t_step: float) -> None:
+        block = np.asarray(toks)  # the only per-dispatch device sync
         if self.monitor is not None:
-            self.monitor.observe(self.stats["decode_steps"],
+            self.monitor.observe(self.stats["decode_steps"] + n,
                                  (time.perf_counter() - t_step) / n)
-        if self.paged:
-            for i in range(self.max_batch):  # host mirror of suffix ingest
-                if slots[i] is not None:
-                    self._lane_forced[i] = max(0, self._lane_forced[i] - n)
-        self._append_block(block, slots, time.perf_counter())
-        for i, r in enumerate(slots):
-            if r is not None and r.done:
-                done.append(r)
-                slots[i] = None  # device lane already inactive
-                if self.paged:
-                    self._release_lane(i)
-                self.stats["completed"] += 1
-
-    # -- scheduler loop -------------------------------------------------------
+        self.sched.reconcile(block, slots, done, n, self.stats,
+                             time.perf_counter(), self.paged,
+                             self._release if self.paged else None)
 
     def run(self) -> List[Request]:
         """Serve until queue + slots drain; returns requests sorted by rid.
-
-        Admission honours `Request.t_arrival` (seconds after this call), so
-        a Poisson stream can be replayed by submitting everything up front.
-        """
-        if self.paged:
-            return self._run_paged()
+        Admission honours `Request.t_arrival` (seconds after this call)."""
         if self._slot_caches is None:
-            self._slot_caches = self._init_slot_caches()
-        caches = self._slot_caches
-        # decode/insert donate the cache buffers: until the loop finishes,
-        # self._slot_caches may reference deleted arrays.  Drop the handle
-        # so an abnormal exit (interrupt, OOM) re-allocates on the next run
-        # instead of poisoning the engine; restored on normal completion.
+            self._slot_caches = self.executor.init_caches(
+                self.paged, *((self.page_size, self.kv.num_pages,
+                               self.max_pages, self.kv_dtype)
+                              if self.paged else ()))
+        st = self.executor.fresh_state(self._slot_caches, self.paged)
+        # programs donate the caches: drop the handle (abnormal-exit safety)
         self._slot_caches = None
-        done: List[Request] = []
-        pending = self._queue
-        self._queue = []
-        slots: List[Optional[Request]] = [None] * self.max_batch
-        # decode state lives on device between horizon boundaries; the host
-        # only touches it on admission events (completions deactivate their
-        # lane on device, inside the fused loop)
-        cur = jnp.full((self.max_batch,), PAD_TOKEN, jnp.int32)
-        active = jnp.zeros((self.max_batch,), bool)
-        eos = jnp.full((self.max_batch,), -1, jnp.int32)
-        budget = jnp.zeros((self.max_batch,), jnp.int32)
-        t0 = time.perf_counter()
-        for r in pending:  # latency clocks start at simulated arrival
-            r.t_enqueue = max(r.t_enqueue, t0 + r.t_arrival)
-
-        while pending or any(r is not None for r in slots):
-            now = time.perf_counter() - t0
-            free = [i for i, r in enumerate(slots) if r is None]
-            arrived = [r for r in pending if r.t_arrival <= now]
-            if free and arrived:
-                pick = self.policy.select(
-                    arrived, len(free),
-                    warm=[b for (b, n, _) in self._jit_prefill if n == 1],
-                    now=now)
-                for r in [arrived[p] for p in pick]:
-                    pending.remove(r)
-                    sl = free.pop(0)
-                    caches, tok = self._admit(r, sl, caches)
-                    t_now = time.perf_counter()
-                    r.t_admitted = t_now
-                    r.append_token(tok, t_now)
-                    if r.done:  # budget of 1 or instant EOS: slot stays free
-                        done.append(r)
-                        free.insert(0, sl)
-                        self.stats["completed"] += 1
-                    else:
-                        slots[sl] = r
-                        cur, active, eos, budget = self._admit_lane_fn()(
-                            cur, active, eos, budget, sl, tok, r.eos_id,
-                            r.max_new_tokens - len(r.tokens_out))
-            if not any(r is not None for r in slots):
-                if pending:  # idle until the next arrival
-                    wait = min(r.t_arrival for r in pending) \
-                        - (time.perf_counter() - t0)
-                    if wait > 0:
-                        time.sleep(min(wait, 0.005))
-                continue
-
-            n = self._pick_horizon(
-                bool(pending),
-                [r.max_new_tokens - len(r.tokens_out)
-                 for r in slots if r is not None])
-            t_step = time.perf_counter()
-            toks, cur, active, budget, caches = self._decode_steps_fn(n)(
-                self.params, caches, cur, active, eos, budget)
-            self._reconcile_dispatch(toks, slots, done, n, t_step)
-
-        self._slot_caches = caches
-        return sorted(done, key=lambda r: r.rid)
-
-    def _run_paged(self) -> List[Request]:
-        """The paged scheduler loop: page-aware admission, prefix-hit
-        suffix ingest through the forced-token queue, preempt-to-free
-        under deadline pressure, page release on completion."""
-        if self._slot_caches is None:
-            self._slot_caches = self._init_slot_caches()
-        # decode/admit programs donate the cache buffers — drop the handle
-        # so an abnormal exit re-allocates instead of poisoning the engine
-        st = {
-            "caches": self._slot_caches,
-            "cur": jnp.full((self.max_batch,), PAD_TOKEN, jnp.int32),
-            "active": jnp.zeros((self.max_batch,), bool),
-            "eos": jnp.full((self.max_batch,), -1, jnp.int32),
-            "budget": jnp.zeros((self.max_batch,), jnp.int32),
-            "forced": jnp.zeros((self.max_batch, self.cache_len), jnp.int32),
-            "flen": jnp.zeros((self.max_batch,), jnp.int32),
-            "fptr": jnp.zeros((self.max_batch,), jnp.int32),
-        }
-        self._slot_caches = None
-        done: List[Request] = []
-        pending = self._queue
-        self._queue = []
-        slots: List[Optional[Request]] = [None] * self.max_batch
-        if not self._ladder_warm:
-            # compile the whole horizon ladder + lane-state programs before
-            # the first request lands by executing them on the empty
-            # (all-inactive) state — semantically a no-op, but a compile
-            # that instead fired mid-serving would stall every resident
-            # lane (the decode-loop analogue of the admission policy's
-            # warm-bucket preference).  The radix tree makes the horizon
-            # schedule state-dependent, so "the warmup pass saw it" does
-            # not cover later passes the way it does for dense slots.
-            for n in self._horizons:
-                toks, cur, active, budget, fptr, caches = \
-                    self._decode_steps_fn(n)(
-                        self.params, st["caches"], st["cur"], st["active"],
-                        st["eos"], st["budget"], st["forced"], st["flen"],
-                        st["fptr"])
-                st.update(caches=caches, cur=cur, active=active,
-                          budget=budget, fptr=fptr)
-            trash_row = jnp.zeros((self.max_pages,), jnp.int32)
-            st["caches"] = self._admit_hit_fn()(st["caches"], 0, trash_row,
-                                                0, trash_row)
-            (st["cur"], st["active"], st["eos"], st["budget"], st["forced"],
-             st["flen"], st["fptr"]) = self._admit_lane_paged_fn()(
-                st["cur"], st["active"], st["eos"], st["budget"],
-                st["forced"], st["flen"], st["fptr"], 0, PAD_TOKEN, -1, 0,
-                jnp.zeros((self.cache_len,), jnp.int32), 0)
-            st["cur"], st["active"] = self._park_lane_fn()(
-                st["cur"], st["active"], 0)
+        if self.paged and not self._ladder_warm:
+            self.executor.warm_ladder(st, self.sched.horizons)
             self._ladder_warm = True
+        done: List[Request] = []
+        pending = self.sched.take_queue()
+        slots: List[Optional[Request]] = [None] * self.max_batch
+        admit = self._admit_paged if self.paged else self._admit_dense
         t0 = time.perf_counter()
         for r in pending:  # latency clocks start at simulated arrival
             r.t_enqueue = max(r.t_enqueue, t0 + r.t_arrival)
@@ -818,148 +257,43 @@ class ContinuousBatchingEngine(EngineBase):
         while pending or any(r is not None for r in slots):
             now = time.perf_counter() - t0
             free = [i for i, r in enumerate(slots) if r is None]
-            arrived = [r for r in pending if r.t_arrival <= now]
-            starved = None  # head-of-line request the pool couldn't cover
-            if free and arrived:
-                pick = self.policy.select(
-                    arrived, len(free),
-                    warm=[b for (b, n, _) in self._jit_prefill if n == 1],
-                    now=now)
-                for r in [arrived[p] for p in pick]:
-                    if not free:
-                        break
-                    sl = free[0]
-                    if not self._admit_paged(r, sl, st):
-                        starved = r
-                        break
-                    free.pop(0)
-                    pending.remove(r)
-                    if r.done:  # budget of 1 / instant EOS at admission
-                        done.append(r)
-                        self._release_lane(sl)
-                        self.stats["completed"] += 1
-                    else:
-                        slots[sl] = r
-            if starved is not None and self.policy.deadline is not None \
-                    and self.policy.deadline.overdue(
-                        now - starved.t_arrival):
-                # deadline pressure and no pages: preempt the lane with the
-                # most work left; the starved request is retried next
-                # boundary (often as a prefix hit on the victim's pages)
+            admitted, starved = self.sched.admission_cycle(
+                pending, free, now, self.executor.warm_buckets,
+                lambda r, sl: admit(r, sl, st))
+            for r, sl in admitted:
+                pending.remove(r)
+                if r.done:  # budget of 1 / instant EOS at admission
+                    done.append(r)
+                    if self.paged:
+                        self._release(sl)
+                    free.insert(0, sl)
+                    self.stats["completed"] += 1
+                else:
+                    slots[sl] = r
+            if self.sched.should_preempt(starved, now):
                 self._preempt(slots, pending, st)
             if not any(r is not None for r in slots):
-                if starved is not None:  # pool-starved with nothing running
-                    time.sleep(0.0005)   # (eviction frees pages next pass)
-                elif pending:  # idle until the next arrival
-                    wait = min(r.t_arrival for r in pending) \
-                        - (time.perf_counter() - t0)
-                    if wait > 0:
-                        time.sleep(min(wait, 0.005))
+                self.sched.idle_wait(pending, starved,
+                                     time.perf_counter() - t0)
                 continue
 
-            remaining = [self._lane_forced[i]
-                         + r.max_new_tokens - len(r.tokens_out)
-                         for i, r in enumerate(slots) if r is not None]
-            n = self._pick_horizon(bool(pending), remaining)
+            n = self.sched.pick_horizon(bool(pending),
+                                        self.sched.lane_remaining(slots))
             t_step = time.perf_counter()
-            toks, cur, active, budget, fptr, caches = \
-                self._decode_steps_fn(n)(
-                    self.params, st["caches"], st["cur"], st["active"],
-                    st["eos"], st["budget"], st["forced"], st["flen"],
-                    st["fptr"])
-            st.update(caches=caches, cur=cur, active=active, budget=budget,
-                      fptr=fptr)
-            self._reconcile_dispatch(toks, slots, done, n, t_step)
+            toks = self.executor.decode(st, n, self.paged)
+            self._reconcile(toks, slots, done, n, t_step)
 
-        # slot-accounting invariant: when drained, the only live page
-        # references are the radix tree's — anything else is a leak
-        assert all(p is None for p in self._lane_pages), self._lane_pages
-        assert self.pool.pages_in_use == self.prefix_cache.cached_pages, (
-            self.pool.pages_in_use, self.prefix_cache.cached_pages)
+        if self.paged:
+            self.kv.assert_drained()
         self._slot_caches = st["caches"]
         return sorted(done, key=lambda r: r.rid)
 
 
-class WaveEngine(EngineBase):
-    """The seed's batch-synchronous scheduler, kept as the measured baseline.
-
-    One batched prefill per wave, decode until every member finishes.  The
-    seed's dead deadline loop is gone (the deadline governs admission order
-    in the continuous engine instead), and finished rows feed PAD_TOKEN —
-    their cache rows are frozen by the decode active mask rather than
-    absorbing stale writes.
-    """
-
-    def __init__(self, *args, **kw):
-        super().__init__(*args, **kw)
-        self.stats.update(waves=0)
-
-    def run(self) -> List[Request]:
-        done: List[Request] = []
-        pending = self._queue
-        self._queue = []
-        t0 = time.perf_counter()
-        for r in pending:  # latency clocks start at simulated arrival
-            r.t_enqueue = max(r.t_enqueue, t0 + r.t_arrival)
-        deadline_s = self.policy.deadline.deadline_s
-        while pending:
-            # deadline batching: launch a partial wave at the deadline with
-            # whatever requests arrived, instead of waiting for a full batch
-            while True:
-                now = time.perf_counter() - t0
-                arrived = [r for r in pending if r.t_arrival <= now]
-                if len(arrived) >= self.max_batch:
-                    break
-                if len(arrived) == len(pending):
-                    break  # nobody else can join: don't sit out the deadline
-                if arrived and now - min(
-                        r.t_arrival for r in arrived) >= deadline_s:
-                    break
-                nxt = min((r.t_arrival for r in pending
-                           if r.t_arrival > now), default=float("inf"))
-                wake = min([nxt] + [r.t_arrival + deadline_s
-                                    for r in arrived])
-                time.sleep(max(min(wake - now, 0.005), 0.0005))
-            wave = arrived[: self.max_batch]
-            for r in wave:
-                pending.remove(r)
-            done += self._serve_wave(wave)
-        return done
-
-    def _serve_wave(self, wave: List[Request]) -> List[Request]:
-        self.stats["waves"] += 1
-        b = len(wave)
-        logits, caches = self._prefill_batch(wave, b)
-        nxt = self._greedy_next(logits)
-        now = time.perf_counter()
-        for i, r in enumerate(wave):
-            r.append_token(int(nxt[i]), now)
-        # decode state moves to device once per wave; the fused horizon
-        # loop feeds tokens back on device and ships (n, b) blocks out
-        cur = jnp.asarray([PAD_TOKEN if r.done else r.tokens_out[-1]
-                           for r in wave], jnp.int32)
-        active = jnp.asarray([not r.done for r in wave])
-        eos = jnp.asarray([r.eos_id for r in wave], jnp.int32)
-        budget = jnp.asarray([r.max_new_tokens - len(r.tokens_out)
-                              for r in wave], jnp.int32)
-
-        while not all(r.done for r in wave):
-            n = self._pick_horizon(
-                False, [r.max_new_tokens - len(r.tokens_out)
-                        for r in wave if not r.done])
-            t_step = time.perf_counter()
-            toks, cur, active, budget, caches = self._decode_steps_fn(n)(
-                self.params, caches, cur, active, eos, budget)
-            block = np.asarray(toks)
-            self.stats["decode_dispatches"] += 1
-            self.stats["decode_steps"] += n
-            self.stats["device_syncs"] += 1
-            if self.monitor is not None:
-                self.monitor.observe(self.stats["decode_steps"],
-                                     (time.perf_counter() - t_step) / n)
-            self._append_block(block, wave, time.perf_counter())
-        return wave
+def __getattr__(name):  # PEP 562: WaveEngine (serving/wave.py) subclasses
+    if name == "WaveEngine":  # EngineBase — lazy both ways, no import cycle
+        from repro.serving.wave import WaveEngine
+        return WaveEngine
+    raise AttributeError(name)
 
 
-# the slot-based continuous-batching engine is the serving default
 ServingEngine = ContinuousBatchingEngine

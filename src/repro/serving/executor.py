@@ -1,0 +1,517 @@
+"""Device-side serving execution: every jitted program, in one place.
+
+The executor owns params (quantizing them for W8A8 serving when asked),
+applies the Cluster-Builder plan (`jax.device_put` placement +
+`in_shardings`/`out_shardings` on every program, so donated cache updates
+never migrate), and compiles/caches the serving programs: bucketed
+prefill, the fused decode-horizon loop (`Model.decode_steps`), the
+slot/lane admission updates, and — under a `mode="serve_pipeline"` plan —
+the stage-pipelined decode program that streams micro-steps through the
+mesh with `collective_permute` (the TPU analogue of the paper's six-FPGA
+pipelined encoder).
+
+Plan-exactness contract: under a `mode="serve"` plan every program is
+traced inside a `shard_hints.hints(serve_exact=True)` context, which (a)
+forces activation gathers before the plan's replicated reduction
+projections (gather-form TP — Fig. 14's gather-then-linear_o) and (b)
+routes the paged decode kernels through shard_map with the arena's
+kv-head dim partitioned (kernels/ops.py).  Every cross-device op is then
+either a gather or per-head-local math, so sharded token streams are
+bit-identical to single-device serving (tests/test_sharded_serving.py).
+
+Host-side policy lives in serving/scheduler.py; page accounting in
+serving/kv_manager.py; serving/engine.py composes the three.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.packing import bucket_len
+from repro.models import shard_hints
+from repro.models.transformer import (
+    Model, greedy_token_update, layer_plan,
+)
+
+PAD_TOKEN = 0  # fed for finished/free slot rows; their logits are never read
+
+
+class Executor:
+    """Jit-program cache + plan placement for one serving engine."""
+
+    def __init__(self, model: Model, params, plan=None,
+                 quant_weights: bool = False, max_batch: int = 8,
+                 cache_len: int = 0, buckets=()):
+        self.model = model
+        self.plan = plan
+        self.quant_weights = bool(quant_weights)
+        self.max_batch = max_batch
+        self.cache_len = cache_len  # engine re-rounds it for paged mode
+        self.buckets = tuple(sorted(buckets))
+        if self.quant_weights:
+            # int8 weight path (models/quantized.py): projections/MLP run
+            # W8A8; with kv_dtype="int8" on top the decode loop is
+            # integer-dominant — the paper's I-BERT datapath at scale
+            from repro.models.quantized import quantize_params_for_serving
+            params = quantize_params_for_serving(params)
+        self._param_shardings = None
+        self._cache_shardings = None
+        self._rep = None
+        self._hints_kw = None
+        if plan is not None:
+            # param specs derive from the leaf tree actually served: under
+            # quant_weights that is the quantized tree — the rule table
+            # shards each "q" like its parent weight and replicates "s" —
+            # which is what lets W8A8 compose with a ClusterPlan
+            plan.param_specs = plan.specs_for_params(
+                jax.eval_shape(lambda: params))
+            self._param_shardings = jax.tree.map(plan.sharding,
+                                                 plan.param_specs)
+            self._rep = plan.sharding(P())
+            params = jax.device_put(params, self._param_shardings)
+            if plan.mode == "serve":
+                self._hints_kw = dict(mesh=plan.mesh, dp_axes=plan.axes.dp,
+                                      tp_axis=plan.axes.tp, serve_exact=True)
+        self.params = params
+        self._jit_prefill: Dict = {}
+        self._jit_decode: Dict = {}
+        self._jit_insert = None
+        self._jit_admit_lane = None
+        self._jit_admit_cold: Dict = {}
+        self._jit_admit_hit = None
+        self._jit_admit_lane_paged = None
+        self._jit_park = None
+
+    # -- trace context --------------------------------------------------------
+
+    @contextlib.contextmanager
+    def _ctx(self):
+        """serve_exact hints are read at trace time, so every jitted call
+        goes through here; re-entering an already-traced program costs one
+        threadlocal write."""
+        if self._hints_kw is None:
+            yield
+        else:
+            with shard_hints.hints(**self._hints_kw):
+                yield
+
+    def _call(self, fn, *args):
+        with self._ctx():
+            return fn(*args)
+
+    # -- cache construction / placement ---------------------------------------
+
+    def init_caches(self, paged: bool, page_size: int = 0,
+                    num_pages: int = 0, max_pages: int = 0,
+                    kv_dtype: str = "bf16"):
+        """Build the persistent serving cache and place it under the plan
+        (paged arenas: kv-head-sharded; dense slot tables: serve-mode slot
+        specs; serve_pipeline: stage-sharded scan leaves)."""
+        if paged:
+            caches = self.model.init_paged_cache(
+                self.max_batch, num_pages, page_size, max_pages,
+                kv_dtype=kv_dtype)
+        else:
+            caches = self.model.init_cache(self.max_batch, self.cache_len)
+        if self.plan is not None:
+            specs = self.plan.specs_for_caches(
+                jax.eval_shape(lambda: caches), batch=self.max_batch,
+                slot_table=True, paged=paged)
+            self._cache_shardings = jax.tree.map(self.plan.sharding, specs)
+            caches = jax.device_put(caches, self._cache_shardings)
+        return caches
+
+    def fresh_state(self, caches, paged: bool) -> Dict[str, Any]:
+        """Device decode state: mutated only through the programs below,
+        fetched only as (n, B) token blocks at horizon boundaries."""
+        b = self.max_batch
+        st = {"caches": caches,
+              "cur": jnp.full((b,), PAD_TOKEN, jnp.int32),
+              "active": jnp.zeros((b,), bool),
+              "eos": jnp.full((b,), -1, jnp.int32),
+              "budget": jnp.zeros((b,), jnp.int32)}
+        if paged:
+            st.update(forced=jnp.zeros((b, self.cache_len), jnp.int32),
+                      flen=jnp.zeros((b,), jnp.int32),
+                      fptr=jnp.zeros((b,), jnp.int32))
+        return st
+
+    # -- prefill ---------------------------------------------------------------
+
+    def _prefill_fn(self, bucket: int, batch: int, cache_slots: int):
+        key = (bucket, batch, cache_slots)
+        if key not in self._jit_prefill:
+            model = self.model
+
+            def fn(params, tokens, positions, lengths):
+                caches = model.init_cache(batch, cache_slots)
+                logits, caches = model.prefill(
+                    params, caches, tokens=tokens, positions=positions,
+                    last_idx=lengths - 1)
+                return logits, caches
+
+            kw = {}
+            if self.plan is not None:
+                kw["in_shardings"] = (self._param_shardings, self._rep,
+                                      self._rep, self._rep)
+            self._jit_prefill[key] = jax.jit(fn, **kw)
+        return self._jit_prefill[key]
+
+    def prefill_prompts(self, prompts, batch: int,
+                        bucket_cache: bool = False):
+        """Bucketed left-aligned batched prefill; returns (logits, caches).
+
+        bucket_cache=True writes a bucket-sized cache (the slot engine's
+        admission path pads it up to the slot row on insert); otherwise
+        the cache spans cache_len and is decoded into directly (waves).
+        """
+        maxlen = max(len(p) for p in prompts)
+        bucket = bucket_len(maxlen, self.buckets, lane=8)
+        cache_slots = bucket if bucket_cache else self.cache_len
+        toks = np.zeros((batch, bucket), np.int32)
+        # pad positions = 2^30 so the causal mask can never attend to them
+        # (and cache slot i == position i for decode)
+        pos = np.full((batch, bucket), 2 ** 30, np.int32)
+        lengths = np.ones((batch,), np.int32)
+        for i, p in enumerate(prompts):
+            n = len(p)
+            toks[i, :n] = p
+            pos[i, :n] = np.arange(n)
+            lengths[i] = n
+        return self._call(self._prefill_fn(bucket, batch, cache_slots),
+                          self.params, jnp.asarray(toks), jnp.asarray(pos),
+                          jnp.asarray(lengths))
+
+    @property
+    def warm_buckets(self):
+        return [b for (b, n, _) in self._jit_prefill if n == 1]
+
+    # -- fused decode ----------------------------------------------------------
+
+    def decode_fn(self, n: int, paged: bool):
+        """Fused n-step decode program (compiled once per horizon length;
+        jax.jit re-specializes per batch shape for the wave engine's
+        variable waves).  The paged variant threads the forced-token queue
+        (prefix-hit suffix ingest) through the same fused loop; a
+        serve_pipeline plan swaps in the stage-streaming program."""
+        key = (n, paged)
+        if key in self._jit_decode:
+            return self._jit_decode[key]
+        model = self.model
+        if self.plan is not None and self.plan.mode == "serve_pipeline":
+            assert not paged, "serve_pipeline streams the dense slot path"
+            self._jit_decode[key] = self._pipeline_decode_fn(n)
+        elif paged:
+
+            def pfn(params, caches, token, active, eos, budget,
+                    forced, flen, fptr):
+                return model.decode_steps(
+                    params, caches, token, active, n, eos_id=eos,
+                    budget=budget, pad_token=PAD_TOKEN, forced=forced,
+                    forced_len=flen, forced_ptr=fptr)
+
+            kw = {}
+            if self.plan is not None:
+                kw["in_shardings"] = ((self._param_shardings,
+                                       self._cache_shardings)
+                                      + (self._rep,) * 7)
+                kw["out_shardings"] = ((self._rep,) * 5
+                                       + (self._cache_shardings,))
+            self._jit_decode[key] = jax.jit(pfn, donate_argnums=(1,), **kw)
+        else:
+
+            def fn(params, caches, token, active, eos, budget):
+                return model.decode_steps(params, caches, token, active, n,
+                                          eos_id=eos, budget=budget,
+                                          pad_token=PAD_TOKEN)
+
+            kw = {}
+            if self.plan is not None:
+                kw["in_shardings"] = ((self._param_shardings,
+                                       self._cache_shardings)
+                                      + (self._rep,) * 4)
+                kw["out_shardings"] = ((self._rep,) * 4
+                                       + (self._cache_shardings,))
+            self._jit_decode[key] = jax.jit(fn, donate_argnums=(1,), **kw)
+        return self._jit_decode[key]
+
+    def decode(self, st: Dict[str, Any], n: int, paged: bool):
+        """Run one fused dispatch against the state dict; returns the
+        (n, B) token block, st updated in place."""
+        fn = self.decode_fn(n, paged)
+        if paged:
+            toks, cur, active, budget, fptr, caches = self._call(
+                fn, self.params, st["caches"], st["cur"], st["active"],
+                st["eos"], st["budget"], st["forced"], st["flen"],
+                st["fptr"])
+            st.update(caches=caches, cur=cur, active=active, budget=budget,
+                      fptr=fptr)
+        else:
+            toks, cur, active, budget, caches = self._call(
+                fn, self.params, st["caches"], st["cur"], st["active"],
+                st["eos"], st["budget"])
+            st.update(caches=caches, cur=cur, active=active, budget=budget)
+        return toks
+
+    def warm_ladder(self, st: Dict[str, Any], horizons) -> None:
+        """Compile the whole horizon ladder + paged lane-state programs by
+        executing them on the empty (all-inactive) state — semantically a
+        no-op, but a compile that instead fired mid-serving would stall
+        every resident lane.  The radix tree makes the horizon schedule
+        state-dependent, so "the warmup pass saw it" does not cover later
+        passes the way it does for dense slots."""
+        for n in horizons:
+            self.decode(st, n, paged=True)
+        trash = np.zeros((st["caches"]["pt"].shape[1],), np.int32)
+        self.admit_hit(st, 0, trash, 0, trash)
+        self.admit_lane_paged(st, 0, PAD_TOKEN, -1, 0,
+                              np.zeros((0,), np.int32), 0)
+        self.park_lane(st, 0)
+
+    # -- slot / lane updates ---------------------------------------------------
+
+    def insert(self, big, small, slot: int):
+        """Write a batch-1 prefill cache into a dense slot row."""
+        if self._jit_insert is None:
+            model = self.model
+
+            def fn(big, small, slot):
+                return model.insert_prefill_cache(big, small, slot)
+
+            kw = {}
+            if self.plan is not None:
+                kw["out_shardings"] = self._cache_shardings
+            self._jit_insert = jax.jit(fn, donate_argnums=(0,), **kw)
+        return self._call(self._jit_insert, big, small, slot)
+
+    def admit_hit(self, st, slot: int, pt_row, pos0: int, reset) -> None:
+        """Point a lane at its (shared prefix + own) pages; the suffix
+        arrives later through the decode loop's forced queue."""
+        if self._jit_admit_hit is None:
+            model = self.model
+
+            def fn(big, slot, pt_row, pos0, reset):
+                return model.admit_lane_cache(big, slot, pt_row, pos0, reset)
+
+            kw = {}
+            if self.plan is not None:
+                kw["out_shardings"] = self._cache_shardings
+            self._jit_admit_hit = jax.jit(fn, donate_argnums=(0,), **kw)
+        st["caches"] = self._call(self._jit_admit_hit, st["caches"], slot,
+                                  jnp.asarray(pt_row), pos0,
+                                  jnp.asarray(reset))
+
+    def admit_cold(self, st, slot: int, small, pt_row, pos0: int, reset,
+                   write_pages: np.ndarray, bucket: int) -> None:
+        """Scatter a bucket prefill cache into the lane's arena pages."""
+        key = (bucket, len(write_pages))
+        if key not in self._jit_admit_cold:
+            model = self.model
+
+            def fn(big, small, slot, pt_row, pos0, reset, wp):
+                return model.admit_lane_cache(big, slot, pt_row, pos0,
+                                              reset, small=small,
+                                              write_pages=wp)
+
+            kw = {}
+            if self.plan is not None:
+                kw["out_shardings"] = self._cache_shardings
+            self._jit_admit_cold[key] = jax.jit(fn, donate_argnums=(0,),
+                                                **kw)
+        st["caches"] = self._call(
+            self._jit_admit_cold[key], st["caches"], small, slot,
+            jnp.asarray(pt_row), pos0, jnp.asarray(reset),
+            jnp.asarray(write_pages))
+
+    def admit_lane(self, st, sl: int, tok: int, eos_id: int,
+                   bud: int) -> None:
+        """One fused update of the device decode state for an admission
+        (four eager .at[].set dispatches cost ~4x this on small hosts)."""
+        if self._jit_admit_lane is None:
+
+            def fn(cur, active, eos, budget, sl, tok, eos_id, bud):
+                return (cur.at[sl].set(tok), active.at[sl].set(True),
+                        eos.at[sl].set(eos_id), budget.at[sl].set(bud))
+
+            self._jit_admit_lane = jax.jit(fn, donate_argnums=(0, 1, 2, 3))
+        st["cur"], st["active"], st["eos"], st["budget"] = self._call(
+            self._jit_admit_lane, st["cur"], st["active"], st["eos"],
+            st["budget"], sl, tok, eos_id, bud)
+
+    def admit_lane_paged(self, st, sl: int, tok: int, eos_id: int, bud: int,
+                         forced_rest, flen: int) -> None:
+        """Fused lane-state update for a paged admission: decode state plus
+        the forced-token (suffix-ingest) queue row."""
+        if self._jit_admit_lane_paged is None:
+
+            def fn(cur, active, eos, budget, forced, fl_, fptr, sl, tok,
+                   eos_id, bud, frow, fl):
+                return (cur.at[sl].set(tok), active.at[sl].set(True),
+                        eos.at[sl].set(eos_id), budget.at[sl].set(bud),
+                        forced.at[sl].set(frow), fl_.at[sl].set(fl),
+                        fptr.at[sl].set(0))
+
+            self._jit_admit_lane_paged = jax.jit(
+                fn, donate_argnums=(0, 1, 2, 3, 4, 5, 6))
+        frow = np.zeros((self.cache_len,), np.int32)
+        if len(forced_rest):
+            frow[:len(forced_rest)] = forced_rest
+        (st["cur"], st["active"], st["eos"], st["budget"], st["forced"],
+         st["flen"], st["fptr"]) = self._call(
+            self._jit_admit_lane_paged, st["cur"], st["active"], st["eos"],
+            st["budget"], st["forced"], st["flen"], st["fptr"], sl, tok,
+            eos_id, bud, jnp.asarray(frow), flen)
+
+    def park_lane(self, st, sl: int) -> None:
+        """Deactivate a lane on device (preemption): masked writes go to
+        the trash page from the next step on."""
+        if self._jit_park is None:
+
+            def fn(cur, active, sl):
+                return cur.at[sl].set(PAD_TOKEN), active.at[sl].set(False)
+
+            self._jit_park = jax.jit(fn, donate_argnums=(0, 1))
+        st["cur"], st["active"] = self._call(self._jit_park, st["cur"],
+                                             st["active"], sl)
+
+    # -- stage-pipelined decode (mode="serve_pipeline") ------------------------
+
+    def _pipeline_decode_fn(self, n: int):
+        """Fused n-step decode streamed through the `stage` mesh axis.
+
+        Stage s holds its contiguous slice of the scan-stacked layer
+        periods (plan specs) and each decode step runs the GPipe schedule
+        from core/pipeline over *lane microbatches*: at tick t, stage s
+        applies its layers to microbatch (t - s) and ppermutes the hidden
+        state forward — the paper's gateway-to-gateway encoder stream with
+        decode micro-steps as the traffic.  The final hidden state is
+        psum-shared so argmax/EOS/budget bookkeeping (the exact
+        `greedy_token_update` used by `Model.decode_steps`) runs
+        replicated, making the pipelined stream bit-identical to the
+        single-device fused loop.
+        """
+        from repro.core.pipeline import (
+            gpipe_forward_perm, pipeline_steps, shard_map_compat,
+        )
+        from repro.models.layers import lm_head, norm
+        from repro.models.transformer import block_apply
+
+        model, plan, cfg = self.model, self.plan, self.model.cfg
+        mesh, axis = plan.mesh, plan.axes.stage
+        n_stages = mesh.shape[axis]
+        n_rep, tail, kinds = layer_plan(cfg)
+        if tail or n_rep % n_stages:
+            raise ValueError(
+                f"serve_pipeline needs the scan-stacked periods to divide "
+                f"the stage axis: n_rep={n_rep}, tail={tail}, "
+                f"stages={n_stages}")
+        b = self.max_batch
+        n_micro = n_stages if b % n_stages == 0 else 1
+        mb = b // n_micro
+        steps = pipeline_steps(n_micro, n_stages)
+        fwd = gpipe_forward_perm(n_stages)
+        np_ = len(kinds)
+
+        def body(scan_p, rest_p, scan_c, pos0, token, active, eos, budget):
+            sidx = jax.lax.axis_index(axis)
+
+            def decode_one(carry, _):
+                cur, act, rem, pos, sc = carry
+                x = model.embed_inputs(rest_p, tokens=cur[:, None])
+                positions = pos[:, None]
+                xm = x.reshape(n_micro, mb, 1, x.shape[-1])
+                buf = jnp.zeros_like(xm[0])
+                out = jnp.zeros_like(xm)
+
+                def tick(t, c2):
+                    buf, out, sc = c2
+                    m = t - sidx  # microbatch this stage works on
+                    stage_on = (m >= 0) & (m < n_micro)
+                    row0 = jnp.clip(m, 0, n_micro - 1) * mb
+                    x_in = jnp.where(sidx == 0,
+                                     xm[jnp.minimum(t, n_micro - 1)], buf)
+                    pos_sl = jax.lax.dynamic_slice_in_dim(
+                        positions, row0, mb, 0)
+                    act_sl = jax.lax.dynamic_slice_in_dim(act, row0, mb, 0)
+
+                    def period_body(h, xs):
+                        pp, pc = xs
+                        pc_sl = jax.tree.map(
+                            lambda a: jax.lax.dynamic_slice_in_dim(
+                                a, row0, mb, 0), pc)
+                        new_sl = {}
+                        for i in range(np_):
+                            h, ns, _ = block_apply(cfg, i, pp[f"b{i}"], h,
+                                                   pos_sl, None,
+                                                   pc_sl[f"b{i}"])
+                            new_sl[f"b{i}"] = ns
+
+                        def upd(full, nsl):
+                            # commit the microbatch rows only for active
+                            # lanes on an active stage — the pipelined
+                            # form of decode_step's cache_map where-mask
+                            old = jax.lax.dynamic_slice_in_dim(
+                                full, row0, mb, 0)
+                            keep = stage_on & act_sl.reshape(
+                                (mb,) + (1,) * (nsl.ndim - 1))
+                            return jax.lax.dynamic_update_slice_in_dim(
+                                full, jnp.where(keep, nsl.astype(full.dtype),
+                                                old), row0, 0)
+
+                        return h, jax.tree.map(upd, pc, new_sl)
+
+                    h, sc = jax.lax.scan(period_body, x_in, (scan_p, sc))
+                    y = jnp.where(stage_on, h, buf)
+                    oslot = t - (n_stages - 1)
+                    write = (sidx == n_stages - 1) & (oslot >= 0)
+                    out = jax.lax.cond(
+                        write,
+                        lambda o: jax.lax.dynamic_update_index_in_dim(
+                            o, y, jnp.maximum(oslot, 0), 0),
+                        lambda o: o, out)
+                    buf = jax.lax.ppermute(y, axis, fwd)
+                    return (buf, out, sc)
+
+                _, out, sc = jax.lax.fori_loop(0, steps, tick,
+                                               (buf, out, sc))
+                # results live on the last stage; share them so the token
+                # feedback loop runs replicated (0 + x is exact in bf16)
+                out = jax.lax.psum(
+                    jnp.where(sidx == n_stages - 1, out,
+                              jnp.zeros_like(out)), axis)
+                h = norm(out.reshape(b, 1, -1), rest_p["final_norm"], cfg)
+                logits = lm_head(h, rest_p["embed"])[:, 0]
+                emit, cur, still, rem = greedy_token_update(
+                    logits, cur, act, rem, eos, PAD_TOKEN)
+                pos = jnp.where(act, pos + 1, pos)
+                return (cur, still, rem, pos, sc), emit
+
+            (cur, act, rem, pos, sc), toks = jax.lax.scan(
+                decode_one,
+                (token.astype(jnp.int32), active, budget, pos0, scan_c),
+                None, length=n)
+            return toks, cur, act, rem, pos, sc
+
+        def fn(params, caches, token, active, eos, budget):
+            rest_p = {k: v for k, v in params.items() if k != "scan"}
+            toks, cur, act, rem, pos, sc = shard_map_compat(
+                body, mesh,
+                in_specs=(P(axis), P(), P(axis), P(), P(), P(), P(), P()),
+                out_specs=(P(), P(), P(), P(), P(), P(axis)),
+            )(params["scan"], rest_p, caches["scan"], caches["pos"],
+              token, active, eos, budget)
+            return toks, cur, act, rem, {"scan": sc, "tail": {}, "pos": pos}
+
+        kw = {}
+        if self._param_shardings is not None:
+            kw["in_shardings"] = ((self._param_shardings,
+                                   self._cache_shardings)
+                                  + (self._rep,) * 4)
+            kw["out_shardings"] = ((self._rep,) * 4
+                                   + (self._cache_shardings,))
+        return jax.jit(fn, donate_argnums=(1,), **kw)

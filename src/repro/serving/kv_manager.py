@@ -1,0 +1,167 @@
+"""KV memory management for the serving engine (host-side, no jax).
+
+Owns everything about *where cache bytes live*: the paged arena's
+free-list allocator (`core/packing.PagePool`), the radix prefix cache that
+lets requests share prompt KV copy-free, the per-lane page lists, and the
+page-table / reset rows an admission hands to the executor.  The split
+mirrors the paper's memory story: on-chip URAM is the scarce resource the
+Cluster Builder budgets per kernel; here KV HBM is budgeted per page, and
+the KV manager is the single owner of that budget.
+
+The executor (serving/executor.py) consumes the numpy rows built here as
+jit operands; the scheduler (serving/scheduler.py) consumes the
+free-page / eviction signals as admission gates.  Neither touches the
+pool directly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.packing import PagePool, RadixPrefixCache
+
+
+def kv_page_bytes(cfg, page_size: int, kv_dtype: str) -> int:
+    """HBM bytes one KV arena page costs across the whole layer stack —
+    the unit for equal-HBM pool sizing (docs/perf.md §int8 pages).
+
+    bf16: 2 (k+v) * KVH * hd elements at 2 B per cache row; int8: the same
+    elements at 1 B plus 2 * KVH f32 scales per row, i.e. (hd+4)/(2*hd) of
+    the bf16 bytes — a fixed budget holds ~2x the pages at hd=64.
+    """
+    per_row = 2 * cfg.n_kv_heads * cfg.head_dim  # k+v elements
+    if kv_dtype == "int8":
+        row_bytes = per_row + 2 * cfg.n_kv_heads * 4  # values + f32 scales
+    else:
+        row_bytes = per_row * 2
+    return cfg.n_layers * page_size * row_bytes
+
+
+def num_pages_for_hbm(cfg, page_size: int, kv_dtype: str,
+                      hbm_bytes: int) -> int:
+    """Pool size (usable pages) a byte budget buys at this dtype."""
+    return int(hbm_bytes // kv_page_bytes(cfg, page_size, kv_dtype))
+
+
+def paged_eligible(cfg, plan=None) -> bool:
+    """Can this (config, plan) pair serve from the paged arena?  The one
+    predicate the engine's ``paged="auto"`` and the serve CLI's guards
+    share: all-attention, unwindowed, causal (recurrent state and ring
+    buffers have no paged analogue), under no plan or a ``mode="serve"``
+    plan (serve_pipeline streams the dense slot path)."""
+    from repro.models.transformer import layer_plan  # lazy: pulls jax
+    _, _, kinds = layer_plan(cfg)
+    return (all(k == "attn" for k in kinds) and not cfg.local_window
+            and bool(cfg.causal)
+            and (plan is None or plan.mode == "serve"))
+
+
+@dataclass
+class AdmissionGrant:
+    """Everything one paged admission needs: the lane's full page list,
+    the covered prefix length (0 = cold), and the executor-ready rows —
+    `pt_row` (the lane's page table, trash-padded) and `reset` (pages
+    whose kpos must re-sentinel before use, trash-padded)."""
+    pages: List[int]
+    hit_pages: List[int]
+    hit_len: int
+    pt_row: np.ndarray
+    reset: np.ndarray
+
+
+class KVManager:
+    """Page-pool + radix-tree owner for one engine.
+
+    Reference-count discipline: a page is held by the lane that owns it
+    (`_lane_pages`), by the radix tree once registered, and by any lane
+    that hit on it; `release()` drops the lane references and the tree
+    keeps registered prefix pages alive for future hits.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, max_batch: int,
+                 max_pages: int):
+        self.pool = PagePool(num_pages, page_size)
+        self.prefix_cache = RadixPrefixCache(self.pool)
+        self.page_size = page_size
+        self.max_pages = max_pages  # page-table row width (per-lane cap)
+        self._lane_pages: List[Optional[List[int]]] = [None] * max_batch
+
+    # -- capacity ------------------------------------------------------------
+
+    def pages_for(self, n_positions: int) -> int:
+        return self.pool.pages_for(n_positions)
+
+    @property
+    def num_pages(self) -> int:
+        return self.pool.num_pages
+
+    @property
+    def free_pages(self) -> int:
+        return self.pool.free_pages
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.pool.pages_in_use
+
+    # -- admission -----------------------------------------------------------
+
+    def admit(self, prompt: np.ndarray, rem_budget: int,
+              max_hit_suffix: int) -> Optional[AdmissionGrant]:
+        """Reserve pages for `prompt` + `rem_budget` decode positions.
+
+        Radix lookup first: a hit reuses the shared prefix pages (already
+        incref'd by lookup) and only the un-hit remainder is allocated; a
+        hit whose suffix exceeds `max_hit_suffix` is declined (one dense
+        prefill is cheaper than re-ingesting that many tokens through the
+        decode loop).  Under pool pressure cached prefixes are LRU-evicted
+        before giving up.  Returns None (nothing held) when the pool can't
+        cover the request — the scheduler may then preempt-to-free.
+        """
+        pool = self.pool
+        need_pages = pool.pages_for(len(prompt) + rem_budget)
+        hit_pages, hit_len = self.prefix_cache.lookup(prompt)
+        if hit_len and len(prompt) - hit_len > max_hit_suffix:
+            pool.decref(hit_pages)  # suffix too long: prefill is cheaper
+            hit_pages, hit_len = [], 0
+        own_need = need_pages - len(hit_pages)
+        if own_need > pool.free_pages:
+            self.prefix_cache.evict(own_need - pool.free_pages)
+        if own_need > pool.free_pages:
+            pool.decref(hit_pages)
+            return None
+        own = pool.alloc(own_need)
+        pages = hit_pages + own
+        pt_row = np.zeros((self.max_pages,), np.int32)
+        pt_row[:len(pages)] = pages
+        reset = np.zeros((self.max_pages,), np.int32)  # trash-page padded
+        reset[:len(own)] = own
+        return AdmissionGrant(pages=pages, hit_pages=hit_pages,
+                              hit_len=hit_len, pt_row=pt_row, reset=reset)
+
+    def commit(self, slot: int, grant: AdmissionGrant) -> None:
+        self._lane_pages[slot] = grant.pages
+
+    def register_prefix(self, prompt: np.ndarray, pages: List[int]) -> int:
+        """Register a cold prompt's full pages for future prefix hits —
+        hit-path suffix pages are never registered (their KV fills in over
+        later decode dispatches; a preemption could strand them
+        half-written)."""
+        return self.prefix_cache.insert(prompt, pages)
+
+    def release(self, slot: int) -> None:
+        """Return lane `slot`'s page references (tree references keep
+        registered prefix pages alive for future hits)."""
+        if self._lane_pages[slot] is not None:
+            self.pool.decref(self._lane_pages[slot])
+            self._lane_pages[slot] = None
+
+    # -- invariants ----------------------------------------------------------
+
+    def assert_drained(self) -> None:
+        """When the engine drains, the only live page references are the
+        radix tree's — anything else is a leak."""
+        assert all(p is None for p in self._lane_pages), self._lane_pages
+        assert self.pool.pages_in_use == self.prefix_cache.cached_pages, (
+            self.pool.pages_in_use, self.prefix_cache.cached_pages)

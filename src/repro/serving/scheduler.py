@@ -1,0 +1,223 @@
+"""Host-side serving policy (no jax): admission, preemption, the horizon
+ladder, and token-stream reconciliation.
+
+Everything here is pure scheduling state — which request enters which
+lane, how many fused decode steps the next dispatch should run, how a
+fetched token block maps back onto request streams, who gets preempted
+under pool pressure.  Device work lives in serving/executor.py; page
+accounting lives in serving/kv_manager.py; serving/engine.py composes the
+three.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.packing import AdmissionPolicy
+from repro.runtime.stragglers import AdmissionDeadline
+
+
+@dataclass(eq=False)  # identity equality: rid is caller-chosen, prompt is a
+class Request:        # numpy array (== would be ambiguous), requests mutate
+    rid: int
+    prompt: np.ndarray  # (len,) int32
+    max_new_tokens: int = 16
+    eos_id: int = -1  # -1: never
+    t_arrival: float = 0.0  # seconds after engine start (Poisson streams)
+    tokens_out: List[int] = field(default_factory=list)
+    done: bool = False
+    t_enqueue: float = 0.0
+    t_admitted: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+    def append_token(self, tok: int, now: float) -> None:
+        assert not self.done, \
+            f"request {self.rid}: token appended after done"
+        if not self.tokens_out:
+            self.t_first_token = now
+        self.tokens_out.append(int(tok))
+        if tok == self.eos_id or len(self.tokens_out) >= self.max_new_tokens:
+            self.done = True
+            self.t_done = now
+
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.tokens_out)
+
+    def effective_prompt(self) -> np.ndarray:
+        """Prompt + tokens already generated: greedy decode is
+        deterministic, so a preempted request re-enters as if its output
+        so far had been part of the prompt and continues its stream."""
+        if not self.tokens_out:
+            return self.prompt
+        return np.concatenate(
+            [np.asarray(self.prompt, np.int32),
+             np.asarray(self.tokens_out, np.int32)])
+
+
+class Scheduler:
+    """Admission ordering + decode-horizon policy for one engine.
+
+    Owns the waiting queue and the host mirror of per-lane forced-token
+    (prefix-hit suffix ingest) counts; never touches device state.
+    """
+
+    def __init__(self, buckets: Sequence[int], deadline_s: float,
+                 decode_horizon: int, max_batch: int):
+        assert decode_horizon >= 1
+        self.policy = AdmissionPolicy(
+            buckets=tuple(sorted(buckets)), lane=8,
+            deadline=AdmissionDeadline(deadline_s))
+        self.decode_horizon = decode_horizon
+        # powers of two bound the number of compiled horizon programs;
+        # decode_horizon=1 is the one-dispatch-per-token baseline
+        self.horizons = [h for h in (1, 2, 4, 8, 16, 32, 64, 128)
+                         if h <= decode_horizon] or [1]
+        self.queue: List[Request] = []
+        self.lane_forced = [0] * max_batch  # host mirror of suffix ingest
+
+    # -- queue ---------------------------------------------------------------
+
+    def enqueue(self, req: Request) -> None:
+        req.t_enqueue = time.perf_counter()
+        self.queue.append(req)
+
+    def take_queue(self) -> List[Request]:
+        pending, self.queue = self.queue, []
+        return pending
+
+    def select(self, arrived: Sequence[Request], n_free: int, warm,
+               now: float) -> List[Request]:
+        """Requests to admit, in order (deadline-overdue FIFO first, then
+        warm buckets — core/packing.AdmissionPolicy)."""
+        pick = self.policy.select(arrived, n_free, warm=warm, now=now)
+        return [arrived[p] for p in pick]
+
+    def admission_cycle(self, pending, free: List[int], now: float, warm,
+                        admit):
+        """One admission pass: call ``admit(req, slot)`` for each selected
+        arrival while free slots last.  Returns (admitted [(req, slot)],
+        starved) — `starved` is the head-of-line request the backing store
+        couldn't cover (admit returned False; nothing was mutated for it),
+        the signal for preempt-to-free."""
+        arrived = [r for r in pending if r.t_arrival <= now]
+        admitted, starved = [], None
+        if free and arrived:
+            for r in self.select(arrived, len(free), warm, now):
+                if not free:
+                    break
+                if not admit(r, free[0]):
+                    starved = r
+                    break
+                admitted.append((r, free.pop(0)))
+        return admitted, starved
+
+    @staticmethod
+    def idle_wait(pending, starved, now: float) -> None:
+        """Nothing resident: sleep to the next arrival, or a beat while a
+        pool-starved admission waits for eviction to free pages."""
+        if starved is not None:
+            time.sleep(0.0005)
+        elif pending:
+            wait = min(r.t_arrival for r in pending) - now
+            if wait > 0:
+                time.sleep(min(wait, 0.005))
+
+    def should_preempt(self, starved, now: float) -> bool:
+        """Deadline pressure on a pool-starved admission triggers
+        preempt-to-free."""
+        return (starved is not None and self.policy.deadline is not None
+                and self.policy.deadline.overdue(now - starved.t_arrival))
+
+    # -- horizon -------------------------------------------------------------
+
+    def pick_horizon(self, waiting: bool, remaining: List[int]) -> int:
+        """Adaptive decode horizon from admission pressure.
+
+        With `waiting` requests, aim for the next *predicted* completion
+        (min remaining budget) so a slot frees — and is refilled — at the
+        earliest useful horizon boundary, floored at 4 steps so dispatch
+        overhead stays amortized (a completion can overshoot by at most 3
+        masked slot-steps); with a drained queue run up to the longest
+        remaining budget.  EOS can still end a lane mid-horizon; those
+        lanes decode masked until the boundary (wasted slot-steps, never
+        wrong tokens)."""
+        if waiting:
+            target = max(min(remaining), min(4, self.decode_horizon))
+        else:
+            target = max(remaining)
+        n = 1
+        for h in self.horizons:
+            if h <= max(1, target):
+                n = h
+        return n
+
+    def lane_remaining(self, slots: Sequence[Optional[Request]]) -> List[int]:
+        """Per-occupied-lane work left: pending forced ingest + budget."""
+        return [self.lane_forced[i] + r.remaining()
+                for i, r in enumerate(slots) if r is not None]
+
+    def consume_forced(self, slots: Sequence[Optional[Request]],
+                       n: int) -> None:
+        for i in range(len(slots)):
+            if slots[i] is not None:
+                self.lane_forced[i] = max(0, self.lane_forced[i] - n)
+
+    # -- reconciliation ------------------------------------------------------
+
+    @staticmethod
+    def append_block(block: np.ndarray, requests, now: float) -> None:
+        """Reconcile one fetched (n, B) token block into request streams.
+
+        -1 marks a step at which the lane emitted nothing: a free slot, a
+        lane that early-exited on device after EOS/budget (-1 *suffix*), or
+        a prefix-hit lane still ingesting its prompt suffix through the
+        forced-token queue (-1 *prefix*) — so -1 entries are skipped, not
+        treated as end-of-block.  Device-side masking mirrors
+        `Request.append_token`'s done rule, so the host appends every
+        non-negative token until its own done flag flips; nothing real can
+        follow a lane's device-side exit."""
+        for i, r in enumerate(requests):
+            if r is None or r.done:
+                continue
+            for tok in block[:, i]:
+                if tok < 0:
+                    continue
+                r.append_token(int(tok), now)
+                if r.done:
+                    break
+
+    def reconcile(self, block: np.ndarray, slots, done: List[Request],
+                  n: int, stats: dict, now: float, paged: bool,
+                  on_release=None) -> None:
+        """Post-dispatch bookkeeping: account the fused dispatch, mirror
+        suffix-ingest consumption, append streams, sweep completed lanes
+        (calling ``on_release(slot)`` for paged page returns)."""
+        stats["decode_dispatches"] += 1
+        stats["decode_steps"] += n
+        stats["device_syncs"] += 1
+        stats["active_lane_steps"] += sum(r is not None for r in slots) * n
+        if paged:
+            self.consume_forced(slots, n)
+        self.append_block(block, slots, now)
+        for i, r in enumerate(slots):
+            if r is not None and r.done:
+                done.append(r)
+                slots[i] = None  # device lane already inactive
+                if on_release is not None:
+                    on_release(i)
+                stats["completed"] += 1
+
+    # -- preemption ----------------------------------------------------------
+
+    @staticmethod
+    def victim(slots: Sequence[Optional[Request]]) -> Optional[int]:
+        """The occupied lane with the most work left (it holds the most
+        still-unearned pages); None when nothing runs."""
+        occ = [(i, r) for i, r in enumerate(slots) if r is not None]
+        if not occ:
+            return None
+        return max(occ, key=lambda ir: ir[1].remaining())[0]

@@ -230,8 +230,11 @@ def test_serve_plan_shardings_applied():
     plan = build_plan(cfg, mesh, jax.eval_shape(lambda: params),
                       mode="serve")
     assert plan.mode == "serve"
+    # paged=False: this test isolates plan placement on the dense slot
+    # path (the plan+paged composition is covered, with a real multi-
+    # device mesh, by tests/test_sharded_serving.py)
     eng = ContinuousBatchingEngine(model, params, max_batch=2,
-                                   buckets=(16,), plan=plan)
+                                   buckets=(16,), plan=plan, paged=False)
     rng = np.random.default_rng(0)
     eng.submit(Request(rid=0, prompt=rng.integers(
         0, cfg.vocab_size, 5).astype(np.int32), max_new_tokens=3))

@@ -20,6 +20,9 @@ analytically onto the target part).
           (also via ``serve_cb --shared-prefix``)
   serve_quant: int8 KV-cache pages vs bf16 paged at equal KV HBM + greedy
           token-match rate (also via ``serve_cb --kv-dtype int8``)
+  serve_spec: greedy speculative decoding (draft lookahead + one batched
+          verify) vs the plain fused-scan engine on a decode-bound stream,
+          with lossless token-match gating (also via ``serve --draft-config``)
 
 Run everything with no args, or a subset: ``python benchmarks/run.py serve_cb``.
 """
@@ -569,6 +572,110 @@ def serve_sharded(state: Dict) -> None:
     }
 
 
+def serve_spec(state: Dict) -> None:
+    """The `--draft-config` axis: greedy speculative decoding vs the plain
+    fused-scan paged engine on a decode-bound stream.
+
+    A 1-layer draft proposes up to `spec_k` tokens per lane inside one
+    dispatch; the target verifies all k+1 positions in a single batched
+    pass (contiguous-query paged attention) and the accepted prefix lands
+    through the forced-token queue, so a dispatch can emit up to k+1
+    tokens for ~one target forward.  Draft/target agreement is the whole
+    game, so both are *fitted* affine-cycle LMs (models/synthetic.py):
+    the high-agreement draft trains on the same corpus as the target, the
+    mid-agreement draft trains on a corpus deviated at every value ≡ 0
+    (mod 3) (`fit_affine_lm(..., disagree_every=3)`), dialing acceptance
+    down and exercising the per-lane depth ladder.  Verification is
+    lossless for greedy decoding — every emitted token is the target's
+    own argmax — so `token_match_rate` is gated at the absolute floor and
+    expected to be exactly 1.0 for BOTH drafts.
+    """
+    from repro.configs import get_config
+    from repro.kernels import ops as kops
+    from repro.models.synthetic import affine_prompts, fit_affine_lm
+    from repro.models.transformer import make_model
+    from repro.serving.engine import ContinuousBatchingEngine, Request
+
+    # 8 layers: deep enough that the 1-layer draft is genuinely cheap
+    # relative to the target (on the 2-layer reduced stack a draft step
+    # costs nearly a target step and speculation cannot win anywhere);
+    # the cb baseline below serves the *same* target, so the gated ratio
+    # compares engines, not model sizes
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              name="smollm-135m-spec-target", n_layers=8)
+    model = make_model(cfg, remat=False)
+    # 3k steps: the 8-layer stack underfits at the 1k default and its
+    # noisier stream drags draft agreement (and so acceptance) down
+    params = fit_affine_lm(model, steps=3000)
+    dcfg = dataclasses.replace(cfg, name=cfg.name + "-draft", n_layers=1)
+    draft = make_model(dcfg, remat=False)
+    dparams_hi = fit_affine_lm(draft)  # same corpus -> high agreement
+    dparams_mid = fit_affine_lm(draft, disagree_every=3)
+
+    rng = np.random.default_rng(0)
+    # decode-bound: short prompts, deep budgets — the regime where drafted
+    # tokens amortize target forwards instead of prefill dominating
+    prompts = affine_prompts(rng, 12, cfg.vocab_size, len_range=(6, 20))
+    buds = rng.integers(24, 48, len(prompts))
+    arrivals = np.cumsum(rng.exponential(1.0 / 300.0, len(prompts)))
+    stream = [Request(rid=i, prompt=p, max_new_tokens=int(buds[i]),
+                      t_arrival=float(arrivals[i]))
+              for i, p in enumerate(prompts)]
+
+    base_kw = dict(max_batch=4, buckets=(32,), max_decode_len=96,
+                   page_size=16)
+    setups = (
+        ("cb", {}),
+        ("spec", dict(spec_config=dict(
+            draft_model=draft, draft_params=dparams_hi, spec_k=8))),
+        ("spec_disagree", dict(spec_config=dict(
+            draft_model=draft, draft_params=dparams_mid, spec_k=8))),
+    )
+    metrics, streams = {}, {}
+    with kops.pinned_impl("ref"):
+        for name, kw in setups:
+            eng = ContinuousBatchingEngine(model, params, **base_kw, **kw)
+            (done, wall, tok_s, ttft), streams[name], metrics[name] = \
+                _measure_cb_engine(eng, stream)
+            toks = sum(len(r.tokens_out) for r in done)
+            extra = ""
+            if eng.spec:
+                acc = (eng.stats["spec_accepted"]
+                       / max(eng.stats["spec_proposed"], 1))
+                metrics[name].update(
+                    acceptance=round(acc, 3),
+                    spec_dispatches=eng.stats["spec_dispatches"],
+                    draft_prefills=eng.stats["spec_draft_prefills"],
+                    catchup_tokens=eng.stats["spec_catchup_tokens"])
+                extra = f" accept={acc:.2f}"
+            row(f"serve_spec_{name}_per_token", wall / toks * 1e6,
+                f"{tok_s:.1f}tok/s "
+                f"disp/tok={metrics[name]['dispatches_per_token']:.3f} "
+                f"ttft_p50={np.percentile(ttft, 50):.1f}ms" + extra)
+    # losslessness: every spec stream (any draft, any acceptance) must be
+    # bit-identical to the plain engine's greedy streams, every pass
+    tot = matched = 0
+    for name in ("spec", "spec_disagree"):
+        for k in range(len(streams["cb"])):
+            for rid, ts in streams["cb"][k].items():
+                tot += len(ts)
+                matched += sum(a == b
+                               for a, b in zip(ts, streams[name][k][rid]))
+    match_rate = matched / max(tot, 1)
+    speedup = metrics["spec"]["tok_s"] / metrics["cb"]["tok_s"]
+    row("serve_spec_vs_cb_tok_s", speedup,
+        "speculative tok/s over plain fused-scan cb at high draft "
+        "agreement (>=1.3 target)")
+    row("serve_spec_token_match_rate", match_rate,
+        f"{matched}/{tot} greedy tokens identical to the plain engine "
+        "(lossless verification; gated floor 0.99, expected exactly 1.0)")
+    state.setdefault("bench_json", {})["serve_spec"] = {
+        "engines": metrics,
+        "spec_vs_cb_tok_s": round(speedup, 3),
+        "token_match_rate": round(match_rate, 4),
+    }
+
+
 BENCHES = {
     "table1": table1_encoder_latency,
     "table2": table2_full_model_eq1,
@@ -583,12 +690,32 @@ BENCHES = {
     "serve_paged": serve_paged,
     "serve_quant": serve_quant,
     "serve_sharded": serve_sharded,
+    "serve_spec": serve_spec,
 }
 
 # benches whose state is produced by earlier benches in the full sweep
 _ORDER = ["table1", "table2", "table3", "table4", "sec9", "table5",
           "fig15", "gmi", "kernels", "serve_cb", "serve_paged",
-          "serve_quant", "serve_sharded"]
+          "serve_quant", "serve_sharded", "serve_spec"]
+
+# every gated section DECLARES the gate-owned metrics it emits (the leaf
+# names _gate_walk owns).  --list derives its table from these
+# declarations — not from the committed baseline — so a new gated section
+# shows up the moment it exists and a stale baseline is loudly flagged
+# instead of silently shipping the section ungated.
+serve_cb.gate_keys = ("tok_s", "dispatches_per_token",
+                      "fused_vs_single_step_tok_s",
+                      "dispatches_per_token_drop")
+serve_paged.gate_keys = ("tok_s", "dispatches_per_token",
+                         "paged_vs_dense_tok_s",
+                         "paged_vs_dense_concurrency")
+serve_quant.gate_keys = ("tok_s", "dispatches_per_token",
+                         "int8_vs_bf16_tok_s", "int8_vs_bf16_concurrency",
+                         "token_match_rate")
+serve_sharded.gate_keys = ("tok_s", "dispatches_per_token",
+                           "sharded_vs_single_tok_s", "token_match_rate")
+serve_spec.gate_keys = ("tok_s", "dispatches_per_token",
+                        "spec_vs_cb_tok_s", "token_match_rate")
 _NEEDS = {"table2": ["table1"], "table3": ["table1"],
           "table4": ["table1", "table3"], "table5": ["sec9"]}
 
@@ -605,7 +732,7 @@ DISP_TOK_INCREASE = 0.10
 RATIO_KEYS = ("paged_vs_dense_tok_s", "paged_vs_dense_concurrency",
               "fused_vs_single_step_tok_s", "dispatches_per_token_drop",
               "int8_vs_bf16_tok_s", "int8_vs_bf16_concurrency",
-              "sharded_vs_single_tok_s")
+              "sharded_vs_single_tok_s", "spec_vs_cb_tok_s")
 # absolute floor: int8 greedy streams must match bf16 on >=99% of tokens —
 # accuracy is not machine-relative, so no baseline-relative band applies
 TOKEN_MATCH_FLOOR = 0.99
@@ -688,7 +815,13 @@ def check_against(baseline_path: str, bench_json: Dict,
     base.pop("_meta", None)
     if ran is not None:
         base = {k: v for k, v in base.items() if k in ran}
+        bench_json = {k: v for k, v in bench_json.items() if k in ran}
+    # report EVERYTHING wrong in one run: all gated metrics the baseline
+    # has never seen AND all threshold violations against the metrics it
+    # does have — a first-run-after-new-section failure must not mask a
+    # real regression in the established sections (and vice versa)
     missing = sorted(set(_gated_paths(bench_json)) - set(_gated_paths(base)))
+    bad = _gate_walk(base, bench_json)
     if missing:
         print(f"PERF GATE UNUSABLE: {baseline_path} has no entry for "
               f"gated metric(s) produced by this run:")
@@ -696,14 +829,14 @@ def check_against(baseline_path: str, bench_json: Dict,
             print(f"  MISSING BASELINE KEY {m}")
         print("refresh the committed baseline (CI: the baseline-refresh "
               "workflow_dispatch job; locally: `python benchmarks/run.py "
-              "serve_cb --shared-prefix --kv-dtype int8 --write-baseline "
-              "benchmarks/baseline.json` on a quiet box) and commit it")
-        return 1
-    bad = _gate_walk(base, bench_json)
+              "serve_cb serve_spec --shared-prefix --kv-dtype int8 "
+              "--write-baseline benchmarks/baseline.json` on a quiet box) "
+              "and commit it")
     if bad:
         print(f"PERF GATE FAILED vs {baseline_path}:")
         for b in bad:
             print(f"  REGRESSION {b}")
+    if missing or bad:
         return 1
     print(f"perf gate OK vs {baseline_path}")
     return 0
@@ -725,7 +858,11 @@ def main(argv=None) -> None:
         del args[i:i + 2]
         return p
 
-    if "--list" in args:  # enumerate benches + their gated baseline keys
+    if "--list" in args:  # enumerate benches + their DECLARED gate keys
+        # keys come from each section's own `gate_keys` declaration, not
+        # from the committed baseline — a freshly added gated section is
+        # listed (and flagged) even before the baseline has been
+        # refreshed, so it can never silently ship ungated
         import os
         base = {}
         bp = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -735,11 +872,25 @@ def main(argv=None) -> None:
                 base = json.load(f)
             base.pop("_meta", None)
             base.pop("rows", None)
-        print(f"{'bench':<14} gated baseline keys ({bp})")
+        print(f"{'bench':<14} declared gate keys (baseline: {bp})")
+        stale = []
         for name in _ORDER:
-            keys = _gated_paths(base.get(name, {}), f"{name}.")
-            print(f"{name:<14} " + (", ".join(keys) if keys
-                                    else "(not gated)"))
+            keys = getattr(BENCHES[name], "gate_keys", ())
+            if not keys:
+                print(f"{name:<14} (not gated)")
+                continue
+            covered = set(p.rsplit(".", 1)[-1]
+                          for p in _gated_paths(base.get(name, {})))
+            missing = [k for k in keys if k not in covered]
+            mark = (f"  [NOT IN BASELINE: {', '.join(missing)}]"
+                    if missing else "")
+            if missing:
+                stale.append(name)
+            print(f"{name:<14} " + ", ".join(keys) + mark)
+        if stale:
+            print(f"\nWARNING: baseline lacks gated keys for "
+                  f"{', '.join(stale)} — refresh it before merging "
+                  "(--write-baseline merges per-section)")
         return
 
     json_path = _path_flag("--json")  # machine-readable perf trajectory
@@ -790,7 +941,7 @@ def main(argv=None) -> None:
         payload["_meta"] = {
             "note": "perf-gate baseline; regenerate ON A QUIET BOX OF THE "
                     "CI RUNNER CLASS with `python benchmarks/run.py "
-                    "serve_cb --shared-prefix --kv-dtype int8 "
+                    "serve_cb serve_spec --shared-prefix --kv-dtype int8 "
                     "--write-baseline benchmarks/baseline.json` plus "
                     "`XLA_FLAGS=--xla_force_host_platform_device_count=8 "
                     "python benchmarks/run.py serve_sharded "

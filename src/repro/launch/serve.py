@@ -137,6 +137,18 @@ def main(argv=None):
                     help="paged KV-cache storage dtype; int8 stores "
                          "quantized pages (+ per-row scales) at ~half the "
                          "HBM per token (docs/serving.md §kv_dtype)")
+    ap.add_argument("--draft-config", default="",
+                    help="arch name for a speculative-decoding draft model "
+                         "(randomly initialised; --reduced applies to it "
+                         "too).  Enables greedy speculative decoding: the "
+                         "draft proposes --spec-k tokens per lane per "
+                         "dispatch and the target verifies them in one "
+                         "batched pass (docs/serving.md §speculative "
+                         "decoding).  Needs the paged cb engine.")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max drafted tokens per speculative dispatch; the "
+                         "scheduler walks a per-lane depth ladder below "
+                         "this cap on low acceptance")
     ap.add_argument("--quant-weights", action="store_true",
                     help="serve W8A8: projections/MLP run int8 x int8 -> "
                          "int32 (models/quantized.py); composes with any "
@@ -183,6 +195,25 @@ def main(argv=None):
         kw["kv_dtype"] = args.kv_dtype
         if args.num_pages:
             kw["num_pages"] = args.num_pages
+        if args.draft_config:
+            if not paged:
+                raise SystemExit(
+                    "serve: --draft-config needs the paged cb engine "
+                    "(all-attention model under --plan none or serve)")
+            dcfg = get_config(args.draft_config)
+            if args.reduced:
+                dcfg = dcfg.reduced()
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise SystemExit(
+                    "serve: draft and target must share a vocabulary "
+                    f"({dcfg.vocab_size} vs {cfg.vocab_size})")
+            draft_model = make_model(dcfg, remat=False)
+            draft_params = init_params(dcfg, jax.random.PRNGKey(args.seed + 1))
+            kw["spec_config"] = dict(draft_model=draft_model,
+                                     draft_params=draft_params,
+                                     spec_k=args.spec_k)
+    elif args.draft_config:
+        raise SystemExit("serve: --draft-config needs --engine cb")
     engine = cls(model, params, max_batch=args.max_batch,
                  buckets=(16, 32, 64, 128), plan=plan, monitor=monitor,
                  decode_horizon=args.decode_horizon,

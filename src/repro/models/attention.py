@@ -247,7 +247,79 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
     window = cfg.local_window
     impl = kops.default_impl()
 
-    if cache is None or x.shape[1] > 1:
+    if cache is not None and page_table is not None and x.shape[1] > 1:
+        # paged verify: Sq = T > 1 contiguous queries against the arena —
+        # the speculative-decoding target pass (docs/serving.md
+        # §speculative decoding).  Each of the T rows is scattered exactly
+        # like the single-query decode write below, then each query attends
+        # through the same paged kernel at its own absolute position; rows
+        # ahead of a query carry kpos greater than its qpos, so the causal
+        # mask hides them.  Row i of the output is therefore bitwise
+        # identical to what a single-step paged decode at positions[:, i]
+        # would have produced — which is what makes greedy verification
+        # lossless.  Rejected speculation needs no cache cleanup: rewinding
+        # the position counter leaves the garbage rows at kpos greater than
+        # every future query position until overwritten (causally
+        # unreachable).
+        assert not window, "paged KV does not support sliding windows"
+        b, t = x.shape[0], x.shape[1]
+        ck, cv = cache["k"], cache["v"]  # (P, ps, KVH, hd)
+        ps = ck.shape[1]
+        quantized = "k_scale" in cache
+        act = (jnp.ones((b,), bool) if active is None
+               else active.astype(bool))
+        # one batched (B*T)-row scatter: within a lane the T positions are
+        # distinct, across lanes only exclusively-owned write pages are
+        # touched, so the only duplicate indices are inactive rows on the
+        # trash page — and those all write the same sentinel kpos, so
+        # scatter order can't matter
+        cpos = positions.astype(jnp.int32)  # (B, T)
+        page = jnp.take_along_axis(page_table, cpos // ps, axis=1)
+        wr_page = jnp.where(act[:, None], page, 0).reshape(-1)
+        wr_off = jnp.where(act[:, None], cpos % ps, 0).reshape(-1)
+        kpos_val = jnp.where(act[:, None], cpos, jnp.int32(2 ** 30))
+        kpos = cache["kpos"].at[wr_page, wr_off].set(kpos_val.reshape(-1))
+        kf = k.reshape(b * t, nkv, hd)
+        vf = v.reshape(b * t, nkv, hd)
+        if quantized:
+            from repro.core.quant import kv_quantize
+            kq, ksc = kv_quantize(kf)
+            vq, vsc = kv_quantize(vf)
+            ck = ck.at[wr_page, wr_off].set(kq)
+            cv = cv.at[wr_page, wr_off].set(vq)
+            cks = cache["k_scale"].at[wr_page, wr_off].set(ksc)
+            cvs = cache["v_scale"].at[wr_page, wr_off].set(vsc)
+        else:
+            ck = ck.at[wr_page, wr_off].set(kf.astype(ck.dtype))
+            cv = cv.at[wr_page, wr_off].set(vf.astype(cv.dtype))
+        route = "pallas" if (impl == "pallas" and cfg.causal) else "ref"
+        mesh_kw = {}
+        ctx = paged_shard_ctx()
+        if ctx is not None and nkv % ctx[2] == 0 and nh % ctx[2] == 0:
+            mesh_kw = {"mesh": ctx[0], "axis": ctx[1]}
+        # fold the T contiguous queries into the batch axis: ONE kernel
+        # dispatch for the whole block — (B*T) lanes sharing the arena,
+        # each query attending at its own absolute position.  Per-row
+        # attention has no cross-batch reduction, so row (b, i) is bitwise
+        # what a single-step paged decode at positions[b, i] would produce
+        # — at one dispatch's cost instead of T.
+        qf = qs.reshape(b * t, nh, hd)
+        ptf = jnp.repeat(page_table, t, axis=0)  # (B*T, MAXP)
+        qpf = cpos.reshape(-1)
+        actf = jnp.repeat(act, t)
+        if quantized:
+            of = kops.paged_flash_decode_q(qf, ck, cv, cks, cvs, kpos, ptf,
+                                           qpf, active=actf, impl=route,
+                                           **mesh_kw)
+        else:
+            of = kops.paged_flash_decode(qf, ck.astype(q.dtype),
+                                         cv.astype(q.dtype), kpos, ptf, qpf,
+                                         active=actf, impl=route, **mesh_kw)
+        out = of.reshape(b, t, nh, hd)
+        new_cache = {"k": ck, "v": cv, "kpos": kpos}
+        if quantized:
+            new_cache.update({"k_scale": cks, "v_scale": cvs})
+    elif cache is None or x.shape[1] > 1:
         if x.shape[1] <= DENSE_ATTN_MAX_KV:
             msk = _mask(x.shape[1], x.shape[1], positions, positions,
                         cfg.causal, window, segment_ids, segment_ids)

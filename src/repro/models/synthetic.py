@@ -36,11 +36,24 @@ _FIT_CACHE: Dict[Tuple, object] = {}
 
 
 def affine_batch(rng: np.random.Generator, vocab: int, batch: int = 16,
-                 seq: int = 32):
-    """(tokens, labels) minibatch of affine cycles."""
+                 seq: int = 32, disagree_every: int = 0,
+                 disagree_delta: int = 1):
+    """(tokens, labels) minibatch of affine cycles.
+
+    disagree_every=E > 0 deviates the corpus: any token whose clean affine
+    value is ≡ 0 (mod E) is replaced by value + disagree_delta.  The rule
+    is a function of the *predicted value* (recoverable from any two
+    consecutive clean tokens), not of absolute position, so a model fits
+    it as easily as the clean task — two models fitted with different E
+    then disagree on ~1/E of greedy steps, which is how the speculative-
+    decoding benchmarks dial draft/target agreement (benchmarks/run.py
+    serve_spec)."""
     t0 = rng.integers(0, vocab, (batch, 1))
     step = rng.integers(*STEP_RANGE, (batch, 1))
     toks = (t0 + step * np.arange(seq + 1)) % vocab
+    if disagree_every:
+        toks = np.where(toks % disagree_every == 0,
+                        (toks + disagree_delta) % vocab, toks)
     return jnp.asarray(toks[:, :-1]), jnp.asarray(toks[:, 1:])
 
 
@@ -56,14 +69,18 @@ def affine_prompts(rng: np.random.Generator, n: int, vocab: int,
     return out
 
 
-def fit_affine_lm(model, steps: int = 1000, lr: float = 1e-2, seed: int = 0):
+def fit_affine_lm(model, steps: int = 1000, lr: float = 1e-2, seed: int = 0,
+                  disagree_every: int = 0, disagree_delta: int = 1):
     """Fit `model` (a transformer.Model) to the affine-cycle task.
 
     Plain adam with f32 moments over the bf16 weights; the (model config
-    name, steps, lr, seed) result is cached per process because the
-    benchmarks and tests all want the same fitted instrument.
+    name, steps, lr, seed, disagreement) result is cached per process
+    because the benchmarks and tests all want the same fitted instrument.
+    `disagree_every` deviates the training corpus (see `affine_batch`) so
+    a draft model can be fitted to agree with a clean-fitted target on a
+    controllable fraction of greedy steps.
     """
-    key = (model.cfg.name, steps, lr, seed)
+    key = (model.cfg.name, steps, lr, seed, disagree_every, disagree_delta)
     if key in _FIT_CACHE:
         return _FIT_CACHE[key]
     from repro.models.transformer import init_params
@@ -95,7 +112,8 @@ def fit_affine_lm(model, steps: int = 1000, lr: float = 1e-2, seed: int = 0):
     rng = np.random.default_rng(seed)
     m, v = m0, v0
     for i in range(1, steps + 1):
-        t, l = affine_batch(rng, vocab)
+        t, l = affine_batch(rng, vocab, disagree_every=disagree_every,
+                            disagree_delta=disagree_delta)
         params, m, v, _ = step_fn(params, m, v, t, l, jnp.float32(i))
     _FIT_CACHE[key] = params
     return params

@@ -210,6 +210,63 @@ def paged_cache_map(fn, *trees):
             for k in trees[0]}
 
 
+def spec_acceptance(ins, tgt, active, remaining, eos_id, pad_token,
+                    forced, forced_len, forced_ptr):
+    """Vectorized acceptance state machine for one speculative block.
+
+    ins: (B, T) the block's input tokens (T = k+1; column 0 is the lane's
+    current input, later columns are forced-queue tokens or draft
+    proposals); tgt: (B, T) the target's greedy argmax at each position.
+    Mirrors `decode_steps`' forced-queue semantics step for step: step j's
+    output is swallowed while ``forced_ptr + j < forced_len``; a *drafted*
+    input (one the forced queue didn't cover) is only consumed if it equals
+    the target's argmax at the previous step; the first divergence emits
+    the target's own argmax — which is already ``tgt[:, j-1]``, the token
+    whose emission preceded the divergence — so rejection costs nothing and
+    the emitted stream is bit-identical to non-speculative greedy decode.
+
+    Returns (emit (T, B) with -1 holes, cur, alive, remaining, forced_ptr,
+    n_consumed) — `n_consumed` is how many block positions the equivalent
+    sequential execution would have run, i.e. the position-counter advance
+    for both the target and draft caches.
+    """
+    b, t = ins.shape
+    lane = jnp.arange(b)
+    fcap = forced.shape[1]
+    valid = active   # step 0's input is the lane's own cur: always matched
+    alive = active
+    rem = remaining
+    n_consumed = jnp.zeros((b,), jnp.int32)
+    emits = []
+    for j in range(t):
+        if j > 0:
+            drafted = (forced_ptr + j - 1) >= forced_len
+            matched = ~drafted | (ins[:, j] == tgt[:, j - 1])
+            valid = valid & matched & alive
+        n_consumed = n_consumed + valid.astype(jnp.int32)
+        swallowed = (forced_ptr + j) < forced_len
+        emitting = valid & ~swallowed
+        emits.append(jnp.where(emitting, tgt[:, j], -1))
+        rem = jnp.where(emitting, rem - 1, rem)
+        exited = emitting & ((tgt[:, j] == eos_id) | (rem <= 0))
+        alive = alive & ~exited
+    # next input for the sequential-equivalent state: the first unconsumed
+    # step's input — a still-pending forced token, or the target argmax of
+    # the last consumed step (the correction token on divergence, the bonus
+    # token on full acceptance; both were just emitted)
+    idx = forced_ptr + n_consumed - 1
+    from_forced = idx < forced_len
+    nxt = jnp.where(
+        from_forced,
+        forced[lane, jnp.clip(idx, 0, fcap - 1)],
+        tgt[lane, jnp.clip(n_consumed - 1, 0, t - 1)]).astype(jnp.int32)
+    cur = jnp.where(alive, nxt, pad_token).astype(jnp.int32)
+    fptr = forced_ptr + jnp.minimum(
+        jnp.maximum(forced_len - forced_ptr, 0), n_consumed)
+    return (jnp.stack(emits, axis=0), cur, alive, rem, fptr.astype(jnp.int32),
+            n_consumed)
+
+
 def greedy_token_update(logits, cur, active, remaining, eos_id, pad_token):
     """One step of the fused decode loop's token state machine (no forced
     queue): greedy argmax, -1 emission for masked lanes, EOS/budget lane
@@ -559,6 +616,109 @@ class Model:
             step, (token.astype(jnp.int32), active, budget,
                    forced_ptr.astype(jnp.int32), caches), None, length=n)
         return toks, cur, act, rem, fptr, caches
+
+    def draft_steps(self, params, caches, token: jax.Array,
+                    active: jax.Array, n_draft: int,
+                    forced: jax.Array, forced_len: jax.Array,
+                    forced_ptr: jax.Array, pad_token: int = 0):
+        """Build one speculative input block on the draft model.
+
+        Runs ``n_draft + 1`` draft decode steps: step j consumes input
+        ``ins[:, j]`` — the forced-queue token when the queue still covers
+        the position (so a prefix-hit lane's draft cache ingests the same
+        suffix stream the target does), the previous step's draft argmax
+        otherwise.  The final step exists only to ingest the last input's
+        KV, so the draft cache covers every position the target will
+        verify; its output is discarded.  Returns (ins (B, n_draft+1),
+        caches) with the draft position counters advanced by n_draft+1 —
+        the caller rewinds them to the accepted length.
+        """
+        b = token.shape[0]
+        lane = jnp.arange(b)
+        fcap = forced.shape[1]
+        cur = jnp.where(active, token, pad_token).astype(jnp.int32)
+        ins = [cur]
+        for j in range(n_draft + 1):
+            logits, caches = self.decode_step(params, caches, cur,
+                                              active=active)
+            if j == n_draft:
+                break
+            prop = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            idx = forced_ptr + j
+            nxt = jnp.where(idx < forced_len,
+                            forced[lane, jnp.minimum(idx, fcap - 1)], prop)
+            cur = jnp.where(active, nxt, pad_token).astype(jnp.int32)
+            ins.append(cur)
+        return jnp.stack(ins, axis=1), caches
+
+    def verify_block(self, params, caches, tokens: jax.Array,
+                     active: Optional[jax.Array] = None):
+        """Batched target pass over T contiguous speculative inputs.
+
+        tokens: (B, T) — position ``caches['pos'][b] + j`` for column j.
+        One backbone call with Sq = T rides the paged multi-query verify
+        branch (models/attention.py): every row's logits are bitwise
+        identical to what T chained single-step `decode_step` calls with
+        the same inputs would produce, which is the whole lossless-greedy
+        argument.  Returns (logits (B, T, V), caches) with the position
+        counters untouched — the caller advances them by the accepted
+        length only.
+        """
+        assert "pt" in caches, "verify_block requires a paged cache"
+        b, t = tokens.shape
+        x = self.embed_inputs(params, tokens=tokens)
+        positions = (caches["pos"][:, None]
+                     + jnp.arange(t, dtype=jnp.int32)[None, :])
+        sub = {"scan": caches["scan"], "tail": caches["tail"]}
+        h, sub, _ = self.backbone(params, x, positions, caches=sub,
+                                  page_table=caches["pt"], active=active)
+        logits = lm_head(h, params["embed"])
+        return logits, dict(sub, pos=caches["pos"], pt=caches["pt"])
+
+    def spec_decode_step(self, params, caches, token: jax.Array,
+                         active: jax.Array, n_draft: int,
+                         draft_model: "Model", draft_params, draft_caches,
+                         eos_id: Optional[jax.Array] = None,
+                         budget: Optional[jax.Array] = None,
+                         pad_token: int = 0,
+                         forced: Optional[jax.Array] = None,
+                         forced_len: Optional[jax.Array] = None,
+                         forced_ptr: Optional[jax.Array] = None):
+        """One fused speculative block: draft scan + batched target verify
+        + acceptance ingest, emitting up to ``n_draft + 1`` tokens per lane
+        per dispatch while staying bit-identical to `decode_steps`.
+
+        Rejection rollback is a position-counter rewind on both caches:
+        rejected rows sit at kpos beyond every future query position until
+        the sequential stream overwrites them (write-then-attend plus the
+        causal mask make them unreachable — docs/serving.md §speculative
+        decoding).  Returns (toks (n_draft+1, B), cur, active, remaining,
+        forced_ptr, caches, draft_caches, n_consumed).
+        """
+        b = token.shape[0]
+        if eos_id is None:
+            eos_id = jnp.full((b,), -1, jnp.int32)
+        if budget is None:
+            budget = jnp.full((b,), 2 ** 30, jnp.int32)
+        if forced is None:
+            forced = jnp.zeros((b, 1), jnp.int32)
+            forced_len = jnp.zeros((b,), jnp.int32)
+            forced_ptr = jnp.zeros((b,), jnp.int32)
+        ins, draft_caches = draft_model.draft_steps(
+            draft_params, draft_caches, token, active, n_draft,
+            forced, forced_len, forced_ptr, pad_token)
+        logits, caches = self.verify_block(params, caches, ins,
+                                           active=active)
+        tgt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks, cur, alive, rem, fptr, v = spec_acceptance(
+            ins, tgt, active, budget, eos_id, pad_token,
+            forced, forced_len, forced_ptr)
+        caches = dict(caches, pos=jnp.where(
+            active, caches["pos"] + v, caches["pos"]))
+        draft_caches = dict(draft_caches, pos=jnp.where(
+            active, draft_caches["pos"] - (n_draft + 1) + v,
+            draft_caches["pos"]))
+        return toks, cur, alive, rem, fptr, caches, draft_caches, v
 
     def insert_prefill_cache(self, big, small, slot: jax.Array):
         """Write batch-1 prefill caches `small` into row `slot` of the

@@ -66,6 +66,10 @@ class EngineBase:
 
     def submit(self, req: Request) -> None:
         need = self.policy.bucket_of(len(req.prompt)) + req.max_new_tokens
+        # speculation scatters up to spec_k rows past the committed
+        # position; the lane's page table must cover the overshoot
+        need += getattr(self, "spec_k", 0) if getattr(self, "spec", False) \
+            else 0
         if need > self.cache_len:
             raise ValueError(
                 f"request {req.rid}: bucket+budget {need} exceeds slot "
@@ -98,11 +102,13 @@ class ContinuousBatchingEngine(EngineBase):
     def __init__(self, *args, paged="auto", page_size: int = 16,
                  num_pages: Optional[int] = None,
                  max_hit_suffix: Optional[int] = None,
-                 kv_dtype: str = "bf16", **kw):
+                 kv_dtype: str = "bf16",
+                 spec_config: Optional[dict] = None, **kw):
         super().__init__(*args, **kw)
         self.stats.update(admitted=0, completed=0, prefills=0,
                           active_lane_steps=0)
         self._slot_caches = None
+        self._draft_slot_caches = None
         eligible = paged_eligible(self.model.cfg, self.plan)
         if paged == "auto":
             paged = eligible
@@ -121,6 +127,11 @@ class ContinuousBatchingEngine(EngineBase):
                 "back to dense slots")
         self.kv_dtype = kv_dtype
         self.kv: Optional[KVManager] = None
+        self.spec = bool(spec_config)
+        if self.spec and not self.paged:
+            raise ValueError(
+                "spec_config needs the paged KV pool: the draft arena and "
+                "the batched verify both address KV through page tables")
         if self.paged:
             self.page_size = page_size
             # whole-page capacity: gathered paged layout == dense slot row
@@ -129,8 +140,30 @@ class ContinuousBatchingEngine(EngineBase):
             self.max_pages = self.cache_len // page_size
             if num_pages is None:  # default: dense table capacity + trash
                 num_pages = self.max_batch * self.max_pages + 1
+            draft_num_pages = 0
+            if self.spec:
+                # draft arena default: position parity with the target —
+                # every target page the pool can hand a lane has a draft
+                # twin (kv_manager.spec_pool_split sizes both from one
+                # HBM byte budget when the caller wants byte parity)
+                self.spec_k = int(spec_config.get("spec_k", 4))
+                assert self.spec_k >= 1
+                self.draft_model: Model = spec_config["draft_model"]
+                draft_num_pages = int(spec_config.get("draft_num_pages")
+                                      or num_pages)
+                self.executor.set_draft(self.draft_model,
+                                        spec_config["draft_params"])
+                self.sched.set_spec(self.spec_k)
+                self._spec_warm = False
+                self._tpos = [0] * self.max_batch   # target positions
+                self._dpos = [0] * self.max_batch   # draft positions
+                self.stats.update(spec_dispatches=0, spec_draft_steps=0,
+                                  spec_accepted=0, spec_proposed=0,
+                                  spec_draft_prefills=0,
+                                  spec_catchup_tokens=0)
             self.kv = KVManager(num_pages, page_size, self.max_batch,
-                                self.max_pages)
+                                self.max_pages,
+                                draft_num_pages=draft_num_pages)
             self.max_hit_suffix = (max(self.buckets)
                                    if max_hit_suffix is None
                                    else max_hit_suffix)
@@ -163,7 +196,9 @@ class ContinuousBatchingEngine(EngineBase):
         queue; cold -> bucket prefill scattered into owned pages + prompt
         registered.  False = pool can't cover it (nothing held)."""
         prompt = r.effective_prompt()
-        grant = self.kv.admit(prompt, r.remaining(), self.max_hit_suffix)
+        grant = self.kv.admit(prompt, r.remaining(), self.max_hit_suffix,
+                              spec_margin=getattr(self, "spec_k", 0)
+                              if self.spec else 0)
         if grant is None:
             return False
         self.stats["admitted"] += 1
@@ -194,10 +229,30 @@ class ContinuousBatchingEngine(EngineBase):
                     st, sl, r.tokens_out[-1], r.eos_id, r.remaining(),
                     np.zeros((0,), np.int32), 0)
         self.kv.commit(sl, grant)
+        if self.spec and not r.done:
+            self._admit_draft(r, sl, st, grant, prompt)
         self.stats["pages_in_use"] = self.kv.pages_in_use
         self.stats["pages_peak"] = max(self.stats["pages_peak"],
                                        self.kv.pages_in_use)
         return True
+
+    def _admit_draft(self, r: Request, sl: int, st, grant, prompt) -> None:
+        """Bring the lane's draft cache to the target's position: a cold
+        lane prefills the full effective prompt on the draft model, a
+        prefix-hit lane prefills prompt[:hit_len] (page-aligned, so the
+        remaining suffix ingests in lockstep through the spec program's
+        forced queue — the draft has no radix tree to hit on)."""
+        plen = grant.hit_len if grant.hit_len else len(prompt)
+        small, bucket = self.executor.draft_prefill_prompts(
+            [prompt[:plen]], 1)
+        n_wp = min(self.kv.draft_pool.pages_for(bucket),
+                   len(grant.draft_pages))
+        self.executor.admit_cold_draft(
+            st, sl, small, grant.draft_pt_row, plen, grant.draft_reset,
+            np.asarray(grant.draft_pages[:n_wp], np.int32), bucket)
+        self._tpos[sl] = self._dpos[sl] = int(plen)
+        self.sched.reset_lane_spec(sl)
+        self.stats["spec_draft_prefills"] += 1
 
     @staticmethod
     def _first_token(r: Request, tok: int) -> None:
@@ -208,29 +263,98 @@ class ContinuousBatchingEngine(EngineBase):
     def _release(self, sl: int) -> None:
         self.kv.release(sl)
         self.sched.lane_forced[sl] = 0
+        if self.spec:
+            self._tpos[sl] = self._dpos[sl] = 0
         self.stats["pages_in_use"] = self.kv.pages_in_use
 
     def _preempt(self, slots, pending, st) -> None:
         """Evict the lane with the most work left; greedy decode is
         deterministic, so the re-queued victim (usually a prefix hit on
-        its own pages) continues exactly where it stopped."""
+        its own pages) continues exactly where it stopped.  The victim's
+        preemption counter feeds the scheduler's cascade damping: at the
+        budget it becomes victim-exempt and admission-priority."""
         sl = self.sched.victim(slots)
         if sl is None:
             return
         victim, slots[sl] = slots[sl], None
+        victim.n_preempts += 1
         self.executor.park_lane(st, sl)
         self._release(sl)
         pending.append(victim)
         self.stats["preemptions"] += 1
+
+    def _advance_mirrors(self, block: np.ndarray, slots, n: int) -> None:
+        """Advance the host position mirrors by what the device consumed:
+        per active lane, min(pending forced, n) swallowed positions plus
+        one position per emitted token (every consumed step is one or the
+        other — decode_steps and the spec block share this invariant)."""
+        for i, r in enumerate(slots):
+            if r is None:
+                continue
+            emitted = int((block[:, i] >= 0).sum())
+            self._tpos[i] += min(self.sched.lane_forced[i], n) + emitted
 
     def _reconcile(self, toks, slots, done, n: int, t_step: float) -> None:
         block = np.asarray(toks)  # the only per-dispatch device sync
         if self.monitor is not None:
             self.monitor.observe(self.stats["decode_steps"] + n,
                                  (time.perf_counter() - t_step) / n)
+        if self.spec:  # spec-disabled dispatch: draft lags, catchup later
+            self._advance_mirrors(block, slots, n)
         self.sched.reconcile(block, slots, done, n, self.stats,
                              time.perf_counter(), self.paged,
                              self._release if self.paged else None)
+
+    def _reconcile_spec(self, toks, slots, done, k: int,
+                        t_step: float) -> None:
+        """Spec-dispatch bookkeeping: one (k+1, B) block per dispatch;
+        acceptance feedback drives the per-lane depth ladder, and the
+        position mirrors advance in lockstep on both caches (the device
+        rewound them together)."""
+        block = np.asarray(toks)  # the only per-dispatch device sync
+        if self.monitor is not None:
+            self.monitor.observe(self.stats["decode_steps"] + k + 1,
+                                 (time.perf_counter() - t_step) / (k + 1))
+        self.stats["spec_dispatches"] += 1
+        self.stats["spec_draft_steps"] += k + 1
+        self._advance_mirrors(block, slots, k + 1)
+        for i, r in enumerate(slots):
+            if r is None:
+                continue
+            self._dpos[i] = self._tpos[i]  # verify + rewind keep them equal
+            emitted = int((block[:, i] >= 0).sum())
+            if emitted >= 1 and self.sched.lane_forced[i] == 0:
+                # emitted = 1 guaranteed + accepted drafts (+ bonus);
+                # forced-ingest dispatches say nothing about the draft
+                accepted = min(emitted - 1, k)
+                self.stats["spec_accepted"] += accepted
+                self.stats["spec_proposed"] += k
+                self.sched.observe_acceptance(i, accepted, k)
+        self.sched.reconcile(block, slots, done, k + 1, self.stats,
+                             time.perf_counter(), self.paged,
+                             self._release)
+
+    def _spec_catchup(self, slots, st) -> None:
+        """Feed draft lanes the stream tokens the target consumed during
+        spec-disabled dispatches, so the draft cache re-enters speculation
+        at the target's exact position."""
+        lags = [(self._tpos[i] - self._dpos[i]) if r is not None else 0
+                for i, r in enumerate(slots)]
+        width = max(lags)
+        if width <= 0:
+            return
+        tokens = np.zeros((self.max_batch, width), np.int32)
+        for i, r in enumerate(slots):
+            if r is None or lags[i] == 0:
+                continue
+            stream = np.concatenate(
+                [np.asarray(r.prompt, np.int32),
+                 np.asarray(r.tokens_out, np.int32)])
+            tokens[i, :lags[i]] = stream[self._dpos[i]:self._tpos[i]]
+            self._dpos[i] = self._tpos[i]
+        self.executor.draft_catchup(st, tokens,
+                                    np.asarray(lags, np.int32))
+        self.stats["spec_catchup_tokens"] += int(sum(lags))
 
     def run(self) -> List[Request]:
         """Serve until queue + slots drain; returns requests sorted by rid.
@@ -240,12 +364,22 @@ class ContinuousBatchingEngine(EngineBase):
                 self.paged, *((self.page_size, self.kv.num_pages,
                                self.max_pages, self.kv_dtype)
                               if self.paged else ()))
-        st = self.executor.fresh_state(self._slot_caches, self.paged)
-        # programs donate the caches: drop the handle (abnormal-exit safety)
+        if self.spec and self._draft_slot_caches is None:
+            self._draft_slot_caches = self.executor.init_draft_caches(
+                self.page_size, self.kv.draft_pool.num_pages,
+                self.max_pages, self.kv_dtype)
+        st = self.executor.fresh_state(
+            self._slot_caches, self.paged,
+            draft_caches=self._draft_slot_caches if self.spec else None)
+        # programs donate the caches: drop the handles (abnormal-exit safety)
         self._slot_caches = None
+        self._draft_slot_caches = None
         if self.paged and not self._ladder_warm:
             self.executor.warm_ladder(st, self.sched.horizons)
             self._ladder_warm = True
+        if self.spec and not self._spec_warm:
+            self.executor.warm_spec(st, self.sched.spec_ladder)
+            self._spec_warm = True
         done: List[Request] = []
         pending = self.sched.take_queue()
         slots: List[Optional[Request]] = [None] * self.max_batch
@@ -277,15 +411,23 @@ class ContinuousBatchingEngine(EngineBase):
                                      time.perf_counter() - t0)
                 continue
 
-            n = self.sched.pick_horizon(bool(pending),
-                                        self.sched.lane_remaining(slots))
+            k = (self.sched.spec_depth(slots, starved is not None)
+                 if self.spec else 0)
             t_step = time.perf_counter()
-            toks = self.executor.decode(st, n, self.paged)
-            self._reconcile(toks, slots, done, n, t_step)
+            if k:
+                self._spec_catchup(slots, st)
+                toks = self.executor.spec_decode(st, k)
+                self._reconcile_spec(toks, slots, done, k, t_step)
+            else:
+                n = self.sched.pick_horizon(bool(pending),
+                                            self.sched.lane_remaining(slots))
+                toks = self.executor.decode(st, n, self.paged)
+                self._reconcile(toks, slots, done, n, t_step)
 
         if self.paged:
             self.kv.assert_drained()
         self._slot_caches = st["caches"]
+        self._draft_slot_caches = st.get("draft_caches")
         return sorted(done, key=lambda r: r.rid)
 
 

@@ -86,6 +86,40 @@ class Executor:
         self._jit_admit_hit = None
         self._jit_admit_lane_paged = None
         self._jit_park = None
+        # speculative decoding (set_draft): the draft model's params and
+        # program caches — spec programs are keyed per ladder depth like
+        # the horizon programs
+        self.draft_model = None
+        self.draft_params = None
+        self._jit_spec: Dict = {}
+        self._jit_draft_prefill: Dict = {}
+        self._jit_admit_cold_draft: Dict = {}
+        self._jit_catchup: Dict = {}
+
+    def set_draft(self, draft_model: Model, draft_params) -> None:
+        """Install the speculative-decoding draft model.  Draft weights
+        ride the same quantization switch as the target; under a plan they
+        are *replicated* (a reduced-class draft is far below the sharding
+        payoff point, and replication keeps the draft scan free of
+        collectives so only the verify pass pays TP gathers)."""
+        if self.quant_weights:
+            from repro.models.quantized import quantize_params_for_serving
+            draft_params = quantize_params_for_serving(draft_params)
+        if self.plan is not None:
+            draft_params = jax.device_put(draft_params, self._rep)
+        self.draft_model = draft_model
+        self.draft_params = draft_params
+
+    def init_draft_caches(self, page_size: int, num_pages: int,
+                          max_pages: int, kv_dtype: str = "bf16"):
+        """The draft model's paged arena — replicated under a plan, like
+        its params (same rationale)."""
+        caches = self.draft_model.init_paged_cache(
+            self.max_batch, num_pages, page_size, max_pages,
+            kv_dtype=kv_dtype)
+        if self.plan is not None:
+            caches = jax.device_put(caches, self._rep)
+        return caches
 
     # -- trace context --------------------------------------------------------
 
@@ -126,7 +160,8 @@ class Executor:
             caches = jax.device_put(caches, self._cache_shardings)
         return caches
 
-    def fresh_state(self, caches, paged: bool) -> Dict[str, Any]:
+    def fresh_state(self, caches, paged: bool,
+                    draft_caches=None) -> Dict[str, Any]:
         """Device decode state: mutated only through the programs below,
         fetched only as (n, B) token blocks at horizon boundaries."""
         b = self.max_batch
@@ -139,6 +174,8 @@ class Executor:
             st.update(forced=jnp.zeros((b, self.cache_len), jnp.int32),
                       flen=jnp.zeros((b,), jnp.int32),
                       fptr=jnp.zeros((b,), jnp.int32))
+        if draft_caches is not None:
+            st["draft_caches"] = draft_caches
         return st
 
     # -- prefill ---------------------------------------------------------------
@@ -272,6 +309,154 @@ class Executor:
         self.admit_lane_paged(st, 0, PAD_TOKEN, -1, 0,
                               np.zeros((0,), np.int32), 0)
         self.park_lane(st, 0)
+
+    # -- speculative decoding --------------------------------------------------
+
+    def spec_fn(self, k: int):
+        """Fused speculative program for draft depth `k`: the k+1-step
+        draft scan, the single batched target verify (Sq = k+1 through the
+        paged multi-query branch), and the acceptance/emission state
+        machine — one dispatch, one host fetch, up to k+1 tokens per lane.
+        Replaces the horizon decode program for spec-mode dispatches and
+        handles the forced-token queue itself, so admissions need no extra
+        programs."""
+        if k in self._jit_spec:
+            return self._jit_spec[k]
+        model, draft = self.model, self.draft_model
+
+        def fn(params, dparams, caches, dcaches, token, active, eos,
+               budget, forced, flen, fptr):
+            toks, cur, act, rem, fptr, caches, dcaches, _ = \
+                model.spec_decode_step(
+                    params, caches, token, active, k, draft, dparams,
+                    dcaches, eos_id=eos, budget=budget, pad_token=PAD_TOKEN,
+                    forced=forced, forced_len=flen, forced_ptr=fptr)
+            return toks, cur, act, rem, fptr, caches, dcaches
+
+        kw = {}
+        if self.plan is not None:
+            kw["in_shardings"] = ((self._param_shardings, self._rep,
+                                   self._cache_shardings, self._rep)
+                                  + (self._rep,) * 7)
+            kw["out_shardings"] = ((self._rep,) * 5
+                                   + (self._cache_shardings, self._rep))
+        self._jit_spec[k] = jax.jit(fn, donate_argnums=(2, 3), **kw)
+        return self._jit_spec[k]
+
+    def spec_decode(self, st: Dict[str, Any], k: int):
+        """One speculative dispatch; returns the (k+1, B) token block,
+        st (both cache trees included) updated in place."""
+        toks, cur, active, budget, fptr, caches, dcaches = self._call(
+            self.spec_fn(k), self.params, self.draft_params, st["caches"],
+            st["draft_caches"], st["cur"], st["active"], st["eos"],
+            st["budget"], st["forced"], st["flen"], st["fptr"])
+        st.update(caches=caches, draft_caches=dcaches, cur=cur,
+                  active=active, budget=budget, fptr=fptr)
+        return toks
+
+    def warm_spec(self, st: Dict[str, Any], ladder) -> None:
+        """Compile the spec ladder on the empty state (same rationale as
+        warm_ladder)."""
+        for k in ladder:
+            self.spec_decode(st, k)
+
+    def draft_prefill_prompts(self, prompts, batch: int):
+        """Bucketed batch-1 prefill on the *draft* model (cold draft-lane
+        admission; a prefix-hit lane prefills prompt[:hit_len] — the draft
+        has no radix tree, but hit lengths are page-aligned so the suffix
+        ingests in lockstep through the spec program's forced queue)."""
+        from repro.core.packing import bucket_len as _bl
+        maxlen = max(len(p) for p in prompts)
+        bucket = _bl(maxlen, self.buckets, lane=8)
+        key = (bucket, batch)
+        if key not in self._jit_draft_prefill:
+            draft = self.draft_model
+
+            def fn(dparams, tokens, positions, lengths):
+                caches = draft.init_cache(batch, bucket)
+                return draft.prefill(dparams, caches, tokens=tokens,
+                                     positions=positions,
+                                     last_idx=lengths - 1)
+
+            kw = {}
+            if self.plan is not None:
+                kw["in_shardings"] = (self._rep,) * 4
+            self._jit_draft_prefill[key] = jax.jit(fn, **kw)
+        toks = np.zeros((batch, bucket), np.int32)
+        pos = np.full((batch, bucket), 2 ** 30, np.int32)
+        lengths = np.ones((batch,), np.int32)
+        for i, p in enumerate(prompts):
+            n = len(p)
+            toks[i, :n] = p
+            pos[i, :n] = np.arange(n)
+            lengths[i] = n
+        _, caches = self._call(self._jit_draft_prefill[key],
+                               self.draft_params, jnp.asarray(toks),
+                               jnp.asarray(pos), jnp.asarray(lengths))
+        return caches, bucket
+
+    def admit_cold_draft(self, st, slot: int, small, pt_row, pos0: int,
+                         reset, write_pages: np.ndarray,
+                         bucket: int) -> None:
+        """Scatter a draft bucket prefill into the lane's draft-arena
+        pages (the draft twin of admit_cold)."""
+        key = (bucket, len(write_pages))
+        if key not in self._jit_admit_cold_draft:
+            draft = self.draft_model
+
+            def fn(big, small, slot, pt_row, pos0, reset, wp):
+                return draft.admit_lane_cache(big, slot, pt_row, pos0,
+                                              reset, small=small,
+                                              write_pages=wp)
+
+            kw = {}
+            if self.plan is not None:
+                kw["out_shardings"] = self._rep
+            self._jit_admit_cold_draft[key] = jax.jit(
+                fn, donate_argnums=(0,), **kw)
+        st["draft_caches"] = self._call(
+            self._jit_admit_cold_draft[key], st["draft_caches"], small,
+            slot, jnp.asarray(pt_row), pos0, jnp.asarray(reset),
+            jnp.asarray(write_pages))
+
+    def draft_catchup(self, st, tokens: np.ndarray,
+                      lag: np.ndarray) -> None:
+        """Re-synchronize draft lanes after spec-disabled dispatches: feed
+        each lane the stream tokens the target consumed while the draft
+        sat idle (tokens[b, :lag[b]]; columns past a lane's lag are
+        masked, so its cache rows and position counter stop advancing at
+        exactly the target's position).  Compiled per power-of-two width
+        like the horizon ladder."""
+        n = max(1, int(tokens.shape[1]))
+        n_pad = 1 << (n - 1).bit_length()
+        if n_pad not in self._jit_catchup:
+            draft = self.draft_model
+
+            def fn(dparams, dcaches, toks, lag):
+                def step(caches, xs):
+                    tok, j = xs
+                    live = j < lag
+                    _, caches = draft.decode_step(dparams, caches, tok,
+                                                  active=live)
+                    return caches, None
+
+                dcaches, _ = jax.lax.scan(
+                    step, dcaches,
+                    (toks.T, jnp.arange(n_pad, dtype=jnp.int32)))
+                return dcaches
+
+            kw = {}
+            if self.plan is not None:
+                kw["in_shardings"] = (self._rep,) * 4
+                kw["out_shardings"] = self._rep
+            self._jit_catchup[n_pad] = jax.jit(fn, donate_argnums=(1,),
+                                               **kw)
+        padded = np.zeros((tokens.shape[0], n_pad), np.int32)
+        padded[:, :tokens.shape[1]] = tokens
+        st["draft_caches"] = self._call(
+            self._jit_catchup[n_pad], self.draft_params,
+            st["draft_caches"], jnp.asarray(padded),
+            jnp.asarray(lag, np.int32))
 
     # -- slot / lane updates ---------------------------------------------------
 

@@ -45,6 +45,18 @@ def num_pages_for_hbm(cfg, page_size: int, kv_dtype: str,
     return int(hbm_bytes // kv_page_bytes(cfg, page_size, kv_dtype))
 
 
+def spec_pool_split(cfg, draft_cfg, page_size: int, kv_dtype: str,
+                    hbm_bytes: int) -> int:
+    """Pages *per arena* one HBM byte budget buys when a target and a
+    draft arena share it position-for-position (speculative decoding):
+    every lane position costs one target row plus one draft row, so the
+    two pools hold the same page count and the budget divides by the
+    summed per-page cost.  docs/serving.md §speculative decoding."""
+    both = (kv_page_bytes(cfg, page_size, kv_dtype)
+            + kv_page_bytes(draft_cfg, page_size, kv_dtype))
+    return int(hbm_bytes // both)
+
+
 def paged_eligible(cfg, plan=None) -> bool:
     """Can this (config, plan) pair serve from the paged arena?  The one
     predicate the engine's ``paged="auto"`` and the serve CLI's guards
@@ -69,6 +81,12 @@ class AdmissionGrant:
     hit_len: int
     pt_row: np.ndarray
     reset: np.ndarray
+    # speculative decoding only: the lane's draft-arena pages (always
+    # exclusively owned — the draft arena has no radix tree, its content
+    # is disposable lookahead state) and their executor-ready rows
+    draft_pages: Optional[List[int]] = None
+    draft_pt_row: Optional[np.ndarray] = None
+    draft_reset: Optional[np.ndarray] = None
 
 
 class KVManager:
@@ -81,12 +99,21 @@ class KVManager:
     """
 
     def __init__(self, num_pages: int, page_size: int, max_batch: int,
-                 max_pages: int):
+                 max_pages: int, draft_num_pages: int = 0):
         self.pool = PagePool(num_pages, page_size)
         self.prefix_cache = RadixPrefixCache(self.pool)
         self.page_size = page_size
         self.max_pages = max_pages  # page-table row width (per-lane cap)
         self._lane_pages: List[Optional[List[int]]] = [None] * max_batch
+        # speculative decoding's second arena: same page granularity, no
+        # radix tree (draft KV is disposable lookahead — never shared, and
+        # rejection rollback is a device-side position rewind, so the page
+        # accounting is purely lane-owned alloc/release).  Both pools draw
+        # on one HBM budget via spec_pool_split.
+        self.draft_pool: Optional[PagePool] = (
+            PagePool(draft_num_pages, page_size) if draft_num_pages else None)
+        self._draft_lane_pages: List[Optional[List[int]]] = \
+            [None] * max_batch
 
     # -- capacity ------------------------------------------------------------
 
@@ -108,7 +135,8 @@ class KVManager:
     # -- admission -----------------------------------------------------------
 
     def admit(self, prompt: np.ndarray, rem_budget: int,
-              max_hit_suffix: int) -> Optional[AdmissionGrant]:
+              max_hit_suffix: int,
+              spec_margin: int = 0) -> Optional[AdmissionGrant]:
         """Reserve pages for `prompt` + `rem_budget` decode positions.
 
         Radix lookup first: a hit reuses the shared prefix pages (already
@@ -118,9 +146,20 @@ class KVManager:
         decode loop).  Under pool pressure cached prefixes are LRU-evicted
         before giving up.  Returns None (nothing held) when the pool can't
         cover the request — the scheduler may then preempt-to-free.
+
+        spec_margin (speculative decoding): extra positions both arenas
+        must be able to scatter — a speculative block writes up to
+        `spec_k` rows past the lane's committed position before acceptance
+        is known, and a clipped page-table gather would otherwise alias
+        the lane's last page.  When a draft pool exists the lane also
+        needs the same positions in the draft arena (no radix there: the
+        full span is always exclusively owned); if the draft pool can't
+        cover it the target-side reservation is rolled back and the
+        admission declines as a unit.
         """
         pool = self.pool
-        need_pages = pool.pages_for(len(prompt) + rem_budget)
+        need_positions = len(prompt) + rem_budget + spec_margin
+        need_pages = pool.pages_for(need_positions)
         hit_pages, hit_len = self.prefix_cache.lookup(prompt)
         if hit_len and len(prompt) - hit_len > max_hit_suffix:
             pool.decref(hit_pages)  # suffix too long: prefill is cheaper
@@ -131,6 +170,17 @@ class KVManager:
         if own_need > pool.free_pages:
             pool.decref(hit_pages)
             return None
+        draft_pages = draft_pt = draft_reset = None
+        if self.draft_pool is not None:
+            draft_need = self.draft_pool.pages_for(need_positions)
+            if draft_need > self.draft_pool.free_pages:
+                pool.decref(hit_pages)
+                return None
+            draft_pages = self.draft_pool.alloc(draft_need)
+            draft_pt = np.zeros((self.max_pages,), np.int32)
+            draft_pt[:len(draft_pages)] = draft_pages
+            draft_reset = np.zeros((self.max_pages,), np.int32)
+            draft_reset[:len(draft_pages)] = draft_pages
         own = pool.alloc(own_need)
         pages = hit_pages + own
         pt_row = np.zeros((self.max_pages,), np.int32)
@@ -138,10 +188,14 @@ class KVManager:
         reset = np.zeros((self.max_pages,), np.int32)  # trash-page padded
         reset[:len(own)] = own
         return AdmissionGrant(pages=pages, hit_pages=hit_pages,
-                              hit_len=hit_len, pt_row=pt_row, reset=reset)
+                              hit_len=hit_len, pt_row=pt_row, reset=reset,
+                              draft_pages=draft_pages, draft_pt_row=draft_pt,
+                              draft_reset=draft_reset)
 
     def commit(self, slot: int, grant: AdmissionGrant) -> None:
         self._lane_pages[slot] = grant.pages
+        if grant.draft_pages is not None:
+            self._draft_lane_pages[slot] = grant.draft_pages
 
     def register_prefix(self, prompt: np.ndarray, pages: List[int]) -> int:
         """Register a cold prompt's full pages for future prefix hits —
@@ -156,6 +210,12 @@ class KVManager:
         if self._lane_pages[slot] is not None:
             self.pool.decref(self._lane_pages[slot])
             self._lane_pages[slot] = None
+        if self._draft_lane_pages[slot] is not None:
+            # draft pages are never shared (no tree refs), so this frees
+            # them unconditionally — retirement, preemption, and
+            # rejection-rollback all reduce to the same lane release
+            self.draft_pool.decref(self._draft_lane_pages[slot])
+            self._draft_lane_pages[slot] = None
 
     # -- invariants ----------------------------------------------------------
 
@@ -165,3 +225,8 @@ class KVManager:
         assert all(p is None for p in self._lane_pages), self._lane_pages
         assert self.pool.pages_in_use == self.prefix_cache.cached_pages, (
             self.pool.pages_in_use, self.prefix_cache.cached_pages)
+        if self.draft_pool is not None:
+            assert all(p is None for p in self._draft_lane_pages), \
+                self._draft_lane_pages
+            assert self.draft_pool.pages_in_use == 0, \
+                self.draft_pool.pages_in_use

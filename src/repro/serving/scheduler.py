@@ -29,6 +29,7 @@ class Request:        # numpy array (== would be ambiguous), requests mutate
     t_arrival: float = 0.0  # seconds after engine start (Poisson streams)
     tokens_out: List[int] = field(default_factory=list)
     done: bool = False
+    n_preempts: int = 0  # preemption-cascade damping (Scheduler.victim)
     t_enqueue: float = 0.0
     t_admitted: float = 0.0
     t_first_token: float = 0.0
@@ -66,7 +67,8 @@ class Scheduler:
     """
 
     def __init__(self, buckets: Sequence[int], deadline_s: float,
-                 decode_horizon: int, max_batch: int):
+                 decode_horizon: int, max_batch: int,
+                 preempt_budget: int = 2):
         assert decode_horizon >= 1
         self.policy = AdmissionPolicy(
             buckets=tuple(sorted(buckets)), lane=8,
@@ -78,6 +80,18 @@ class Scheduler:
                          if h <= decode_horizon] or [1]
         self.queue: List[Request] = []
         self.lane_forced = [0] * max_batch  # host mirror of suffix ingest
+        # preemption-cascade damping: a request preempted this many times
+        # is excluded from victim() and jumps the admission order instead,
+        # so a hot shared prefix can't starve one lane through the
+        # evict/preempt loop indefinitely
+        self.preempt_budget = preempt_budget
+        # speculation-depth ladder (speculative decoding; set_spec): each
+        # lane carries an acceptance EWMA and its own depth; a dispatch
+        # speculates at the shallowest occupied lane's depth so no lane
+        # pays for draft tokens its stream keeps rejecting
+        self.spec_ladder: List[int] = []
+        self.lane_spec_k = [0] * max_batch
+        self.lane_accept = [1.0] * max_batch
 
     # -- queue ---------------------------------------------------------------
 
@@ -106,7 +120,15 @@ class Scheduler:
         arrived = [r for r in pending if r.t_arrival <= now]
         admitted, starved = [], None
         if free and arrived:
-            for r in self.select(arrived, len(free), warm, now):
+            # preemption-cascade damping: victims already preempted to
+            # their budget are admitted first (FIFO among themselves),
+            # ahead of the policy's ordering — they have paid for their
+            # pages enough times
+            hot = [r for r in arrived if r.n_preempts >= self.preempt_budget]
+            rest = [r for r in arrived if r.n_preempts < self.preempt_budget]
+            order = hot + (self.select(rest, len(free) - len(hot), warm, now)
+                           if rest and len(free) > len(hot) else [])
+            for r in order:
                 if not free:
                     break
                 if not admit(r, free[0]):
@@ -213,11 +235,65 @@ class Scheduler:
 
     # -- preemption ----------------------------------------------------------
 
-    @staticmethod
-    def victim(slots: Sequence[Optional[Request]]) -> Optional[int]:
+    def victim(self, slots: Sequence[Optional[Request]]) -> Optional[int]:
         """The occupied lane with the most work left (it holds the most
-        still-unearned pages); None when nothing runs."""
-        occ = [(i, r) for i, r in enumerate(slots) if r is not None]
+        still-unearned pages); None when nothing runs.  Lanes whose
+        occupant has exhausted its preemption budget are exempt — without
+        the damping, a hot shared prefix keeps re-admitting over the same
+        victim and one request ping-pongs between lane and queue forever
+        (tests/test_serving.py::test_preemption_budget_stops_cascade)."""
+        occ = [(i, r) for i, r in enumerate(slots)
+               if r is not None and r.n_preempts < self.preempt_budget]
         if not occ:
             return None
         return max(occ, key=lambda ir: ir[1].remaining())[0]
+
+    # -- speculation depth ---------------------------------------------------
+
+    def set_spec(self, spec_k: int) -> None:
+        """Enable the speculation-depth ladder up to `spec_k` drafted
+        tokens per dispatch (powers of two, like the horizon ladder, to
+        bound compiled spec programs)."""
+        assert spec_k >= 1
+        self.spec_ladder = [h for h in (1, 2, 4, 8) if h <= spec_k] or [1]
+        top = self.spec_ladder[-1]
+        self.lane_spec_k = [top] * len(self.lane_spec_k)
+        self.lane_accept = [1.0] * len(self.lane_accept)
+
+    def reset_lane_spec(self, slot: int) -> None:
+        """New occupant: start at full depth with a clean acceptance EWMA
+        (greedy acceptance is a property of the stream, not the lane)."""
+        if self.spec_ladder:
+            self.lane_spec_k[slot] = self.spec_ladder[-1]
+            self.lane_accept[slot] = 1.0
+
+    def observe_acceptance(self, slot: int, accepted: int, k: int) -> None:
+        """Fold one dispatch's acceptance (accepted drafted tokens out of
+        k proposed) into the lane's EWMA and walk its depth along the
+        ladder: persistent rejection shrinks k toward 1 (each rejected
+        draft costs a wasted draft forward + verify row), sustained
+        acceptance grows it back."""
+        if not self.spec_ladder:
+            return
+        acc = accepted / max(k, 1)
+        ew = self.lane_accept[slot] = (0.5 * self.lane_accept[slot]
+                                       + 0.5 * acc)
+        cur = self.lane_spec_k[slot]
+        i = self.spec_ladder.index(cur)
+        if ew < 0.4 and i > 0:
+            self.lane_spec_k[slot] = self.spec_ladder[i - 1]
+        elif ew > 0.8 and i < len(self.spec_ladder) - 1:
+            self.lane_spec_k[slot] = self.spec_ladder[i + 1]
+
+    def spec_depth(self, slots: Sequence[Optional[Request]],
+                   starved: bool) -> int:
+        """Drafted tokens for the next dispatch: the shallowest occupied
+        lane's ladder depth, or 0 (speculation off, plain fused decode)
+        under admission pressure — a pool-starved arrival means every
+        speculative margin page is a page eviction could free, and the
+        overshoot past completion boundaries delays the slot hand-off."""
+        if not self.spec_ladder or starved:
+            return 0
+        ks = [self.lane_spec_k[i] for i, r in enumerate(slots)
+              if r is not None]
+        return min(ks) if ks else 0

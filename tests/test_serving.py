@@ -478,3 +478,145 @@ def test_poisson_arrivals_pace_admission():
     assert len(done) == 3
     for r, dt in zip(done, offsets):
         assert r.t_admitted - t0 >= dt - 1e-3, (r.rid, r.t_admitted - t0, dt)
+
+# ---------------------------------------------------------------------------
+# speculative decoding (engine level) + preemption-cascade damping
+# ---------------------------------------------------------------------------
+
+
+def _spec_draft(cfg, model, params, kind):
+    if kind == "self":
+        # the target drafting for itself: acceptance exactly 1.0
+        return model, params
+    import dataclasses
+    dcfg = dataclasses.replace(cfg, name=cfg.name + "-draft", n_layers=1)
+    draft = make_model(dcfg, remat=False)
+    # random init: near-zero acceptance, every block falls back to the
+    # target's own argmax
+    return draft, init_params(dcfg, jax.random.PRNGKey(7))
+
+
+# two cases instead of the full draft_kind x kv_dtype product: each case
+# compiles its own spec + plain engine programs (~5 min on CPU), and the
+# dtype axis is orthogonal to the engine plumbing under test here (the
+# arena-dtype x k sweep lives in test_spec_decode.py) — so cover both
+# draft kinds and both dtypes diagonally
+@pytest.mark.parametrize("draft_kind,kv_dtype", [
+    ("random", "bf16"), ("self", "int8"),
+])
+def test_spec_engine_streams_bit_identical(draft_kind, kv_dtype, ref_impl):
+    """Speculative serving is lossless end to end: on a shared-prefix
+    stream (so admissions mix cold prefills and prefix hits whose suffix
+    rides the forced queue) the spec engine's streams equal the plain
+    paged engine's for a 1.0-acceptance draft AND a ~0-acceptance draft,
+    on bf16 and int8 arenas, with no draft-arena page leaks."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(11)
+    sys_prompt = rng.integers(0, cfg.vocab_size, 18).astype(np.int32)
+
+    def reqs():
+        out = []
+        for i in range(6):
+            tail = np.random.default_rng(200 + i).integers(
+                0, cfg.vocab_size, 3 + i % 3).astype(np.int32)
+            out.append(Request(rid=i,
+                               prompt=np.concatenate([sys_prompt, tail]),
+                               max_new_tokens=6 + (i % 4)))
+        return out
+
+    kw = dict(max_batch=2, buckets=(32,), max_decode_len=24, page_size=4,
+              kv_dtype=kv_dtype)
+    plain = ContinuousBatchingEngine(model, params, **kw)
+    for r in reqs():
+        plain.submit(r)
+    out_plain = {r.rid: r.tokens_out for r in plain.run()}
+
+    draft, dparams = _spec_draft(cfg, model, params, draft_kind)
+    spec = ContinuousBatchingEngine(
+        model, params, spec_config=dict(draft_model=draft,
+                                        draft_params=dparams, spec_k=4),
+        **kw)
+    for r in reqs():
+        spec.submit(r)
+    out_spec = {r.rid: r.tokens_out for r in spec.run()}
+    assert out_plain == out_spec
+    assert spec.stats["prefix_hits"] > 0
+    assert spec.stats["spec_dispatches"] > 0
+    if draft_kind == "self":
+        # a perfect draft never diverges, but `proposed` counts k per lane
+        # per dispatch while a lane whose budget/EOS lands mid-block leaves
+        # the tail of its proposal unconsumed — so the acceptance rate is
+        # high, not exactly 1
+        assert spec.stats["spec_accepted"] > 0
+        assert (spec.stats["spec_accepted"]
+                >= 0.6 * spec.stats["spec_proposed"])
+    # drained: no lane holds draft pages, draft pool fully returned
+    spec.kv.assert_drained()
+
+
+def test_spec_engine_sharded_streams_bit_identical(ref_impl):
+    """Speculative decoding composes with the serve plan: draft params and
+    draft arena replicate, verify queries ride the gather-form TP paged
+    path — streams must equal the single-device plain engine's."""
+    import dataclasses as _dc
+
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8)")
+    from repro.core.cluster_builder import build_plan
+    from repro.launch.mesh import make_mesh
+
+    cfg = _dc.replace(get_config("smollm-135m").reduced(),
+                      n_heads=8, n_kv_heads=8)
+    model = make_model(cfg, remat=False)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 11, 8, 14)]
+
+    def run(plan, spec_config):
+        eng = ContinuousBatchingEngine(
+            model, params, max_batch=2, buckets=(16,), max_decode_len=16,
+            page_size=4, plan=plan, spec_config=spec_config)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+        return {r.rid: r.tokens_out for r in eng.run()}
+
+    ref = run(None, None)
+    mesh = make_mesh((1, jax.device_count()), ("data", "model"))
+    plan = build_plan(cfg, mesh, mode="serve")
+    draft, dparams = _spec_draft(cfg, model, params, "random")
+    assert run(plan, dict(draft_model=draft, draft_params=dparams,
+                          spec_k=2)) == ref
+    # and the 1.0-acceptance path under the same plan
+    assert run(plan, dict(draft_model=model, draft_params=params,
+                          spec_k=2)) == ref
+
+
+def test_preemption_budget_stops_cascade(ref_impl):
+    """Preemption-cascade damping: with a pool that fits only one request
+    and zero deadline slack, hot shared-prefix arrivals would evict the
+    same victim forever (it re-enters the queue, hits the warm prefix,
+    re-admits, and is evicted again).  The per-request preemption budget
+    caps the loop: an over-budget victim is exempt from victim() and
+    jumps the admission order, so every request completes and nobody is
+    preempted more than `preempt_budget` times."""
+    cfg, model, params = _setup()
+    rng = np.random.default_rng(13)
+    shared = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    # 6 usable pages: a cold 9+8-token request takes 5, and even a
+    # prefix-hit follower (2 shared + 3 own) finds only 1 free — every
+    # admission beyond the first must preempt
+    eng = ContinuousBatchingEngine(
+        model, params, max_batch=2, buckets=(8, 16), max_decode_len=8,
+        page_size=4, num_pages=7, deadline_s=0.0)
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=shared.copy(), max_new_tokens=8))
+    done = eng.run()
+    assert len(done) == 4 and all(len(r.tokens_out) == 8 for r in done)
+    assert eng.stats["preemptions"] >= 1
+    assert all(r.n_preempts <= eng.sched.preempt_budget for r in done), \
+        [(r.rid, r.n_preempts) for r in done]
+    # no slot or page leaked through the churn
+    assert all(p is None for p in eng._lane_pages)
+    assert eng.stats["pages_in_use"] == eng.prefix_cache.cached_pages

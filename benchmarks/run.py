@@ -23,6 +23,10 @@ analytically onto the target part).
   serve_spec: greedy speculative decoding (draft lookahead + one batched
           verify) vs the plain fused-scan engine on a decode-bound stream,
           with lossless token-match gating (also via ``serve --draft-config``)
+  serve_throughput: exact=False serve_pipeline (request-skewed schedule +
+          stage-local KV arenas) vs the exact drained pipeline on the
+          forced multi-device host mesh, token streams gated by the 0.98
+          match band (also via ``serve --plan serve_pipeline --no-exact``)
 
 Run everything with no args, or a subset: ``python benchmarks/run.py serve_cb``.
 """
@@ -533,6 +537,7 @@ def serve_sharded(state: Dict) -> None:
                                     suffix_range=(3, 9), budgets=(8, 24),
                                     rate=300.0)
     mesh = make_mesh((1, n_dev), ("data", "model"))
+    state.setdefault("meshes", {})["serve_sharded"] = dict(mesh.shape)
     setups = (("single", None),
               ("sharded", build_plan(cfg, mesh, mode="serve")))
     metrics, streams = {}, {}
@@ -568,6 +573,105 @@ def serve_sharded(state: Dict) -> None:
         "engines": metrics,
         "devices": n_dev,
         "sharded_vs_single_tok_s": round(ratio, 3),
+        "token_match_rate": round(match_rate, 4),
+    }
+
+
+def serve_throughput(state: Dict) -> None:
+    """The throughput-mode tentpole: an exact=False ``serve_pipeline``
+    plan (request-skewed schedule over stage-local paged arenas) vs the
+    exact drained pipeline on the same stream, both on the forced
+    multi-device host mesh (CI: XLA_FLAGS=--xla_force_host_platform_
+    device_count=8).
+
+    The exact schedule drains 2S-1 ticks per decode step (S lane
+    microbatches + S-1 bubble); the skewed schedule keeps every stage on
+    a different lane group's decode step and amortizes to S ticks per
+    step — an asymptotic (2S-1)/S upper bound (1.875x at S=8), realized
+    at 1.2-1.4x after drain ramp + paged-arena overhead (baseline-banded
+    like every ratio).  Unlike every other
+    serving bench this one is NOT bit-exact by contract: the skewed
+    schedule reorders admissions across lane groups, so streams are
+    gated by a token-match band (>=0.98, docs/serving.md §exactness
+    contract) instead of equality — with the pinned ref kernels the
+    observed rate is still 1.0 on this stream.
+    """
+    import dataclasses
+
+    import jax as _jax
+    from repro.configs import get_config
+    from repro.core.cluster_builder import build_plan
+    from repro.kernels import ops as kops
+    from repro.launch.mesh import make_mesh
+    from repro.models.transformer import init_params, make_model
+    from repro.serving.engine import ContinuousBatchingEngine
+    from repro.serving.stream import poisson_requests
+
+    n_dev = _jax.device_count()
+    if n_dev < 2:
+        row("serve_throughput_skipped", 0.0,
+            "needs a multi-device host platform (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=8 before jax init); "
+            "gated keys omitted from this run")
+        state.setdefault("skipped", set()).add("serve_throughput")
+        return
+    n_stages = n_dev
+    # four layer periods per stage: with a single tiny layer per stage
+    # the per-tick dispatch overhead (collectives are real host copies)
+    # swamps the schedule, and the bench would measure XLA fixed costs
+    # rather than the drain bubble the skew schedule removes
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              n_layers=4 * n_stages)
+    model = make_model(cfg, remat=False)
+    params = init_params(cfg, _jax.random.PRNGKey(0))
+    mesh = make_mesh((n_stages,), ("stage",))
+    state.setdefault("meshes", {})["serve_throughput"] = dict(mesh.shape)
+    # decode-bound budgets: the skewed schedule's win is steady-state
+    # ticks-per-step, so deep decodes amortize its S-1 drain ramp
+    stream = poisson_requests(np.random.default_rng(0), 16, cfg.vocab_size,
+                              len_range=(4, 14), budgets=(16, 33),
+                              rate=300.0)
+    setups = (
+        ("exact", build_plan(cfg, mesh, mode="serve_pipeline", exact=True),
+         dict(paged=False)),
+        ("skewed", build_plan(cfg, mesh, mode="serve_pipeline", exact=False),
+         dict(page_size=8)),
+    )
+    metrics, streams = {}, {}
+    with kops.pinned_impl("ref"):
+        for name, plan, kw in setups:
+            eng = ContinuousBatchingEngine(
+                model, params, max_batch=n_stages, buckets=(16,),
+                max_decode_len=40, plan=plan, **kw)
+            (done, wall, tok_s, ttft), streams[name], metrics[name] = \
+                _measure_cb_engine(eng, stream)
+            toks = sum(len(r.tokens_out) for r in done)
+            metrics[name]["paged"] = eng.paged
+            row(f"serve_throughput_{name}_per_token", wall / toks * 1e6,
+                f"{tok_s:.1f}tok/s stages={n_stages} paged={eng.paged} "
+                f"ttft_p50={np.percentile(ttft, 50):.1f}ms "
+                f"disp/tok={metrics[name]['dispatches_per_token']:.3f}")
+    tot = matched = 0
+    for k in range(len(streams["exact"])):  # every measured pass
+        for rid, ts in streams["exact"][k].items():
+            tot += len(ts)
+            matched += sum(a == b
+                           for a, b in zip(ts, streams["skewed"][k][rid]))
+    match_rate = matched / max(tot, 1)
+    ratio = metrics["skewed"]["tok_s"] / metrics["exact"]["tok_s"]
+    row("serve_throughput_vs_exact_tok_s", ratio,
+        f"request-skewed tok/s over the exact drained pipeline on the "
+        f"{n_stages}-stage host mesh (>=1.2 target; ceiling "
+        f"{(2 * n_stages - 1) / n_stages:.2f}x)")
+    row("serve_throughput_token_match_rate", match_rate,
+        f"{matched}/{tot} tokens identical to the exact pipeline "
+        "(band floor 0.98 — NOT an equality gate; docs/serving.md "
+        "§exactness contract)")
+    state.setdefault("bench_json", {})["serve_throughput"] = {
+        "engines": metrics,
+        "devices": n_dev,
+        "stages": n_stages,
+        "throughput_vs_exact_tok_s": round(ratio, 3),
         "token_match_rate": round(match_rate, 4),
     }
 
@@ -690,13 +794,14 @@ BENCHES = {
     "serve_paged": serve_paged,
     "serve_quant": serve_quant,
     "serve_sharded": serve_sharded,
+    "serve_throughput": serve_throughput,
     "serve_spec": serve_spec,
 }
 
 # benches whose state is produced by earlier benches in the full sweep
 _ORDER = ["table1", "table2", "table3", "table4", "sec9", "table5",
           "fig15", "gmi", "kernels", "serve_cb", "serve_paged",
-          "serve_quant", "serve_sharded", "serve_spec"]
+          "serve_quant", "serve_sharded", "serve_throughput", "serve_spec"]
 
 # every gated section DECLARES the gate-owned metrics it emits (the leaf
 # names _gate_walk owns).  --list derives its table from these
@@ -714,6 +819,9 @@ serve_quant.gate_keys = ("tok_s", "dispatches_per_token",
                          "token_match_rate")
 serve_sharded.gate_keys = ("tok_s", "dispatches_per_token",
                            "sharded_vs_single_tok_s", "token_match_rate")
+serve_throughput.gate_keys = ("tok_s", "dispatches_per_token",
+                              "throughput_vs_exact_tok_s",
+                              "token_match_rate")
 serve_spec.gate_keys = ("tok_s", "dispatches_per_token",
                         "spec_vs_cb_tok_s", "token_match_rate")
 _NEEDS = {"table2": ["table1"], "table3": ["table1"],
@@ -732,11 +840,32 @@ DISP_TOK_INCREASE = 0.10
 RATIO_KEYS = ("paged_vs_dense_tok_s", "paged_vs_dense_concurrency",
               "fused_vs_single_step_tok_s", "dispatches_per_token_drop",
               "int8_vs_bf16_tok_s", "int8_vs_bf16_concurrency",
-              "sharded_vs_single_tok_s", "spec_vs_cb_tok_s")
+              "sharded_vs_single_tok_s", "throughput_vs_exact_tok_s",
+              "spec_vs_cb_tok_s")
 # absolute floor: int8 greedy streams must match bf16 on >=99% of tokens —
 # accuracy is not machine-relative, so no baseline-relative band applies
 TOKEN_MATCH_FLOOR = 0.99
+# per-section overrides: serve_throughput is explicitly NOT bit-exact
+# (request-skewed schedule; docs/serving.md §exactness contract) and is
+# gated at the contract's 0.98 band instead of the bit-identity floor
+_MATCH_FLOORS = {"serve_throughput": 0.98}
 _GATED_LEAVES = ("tok_s", "dispatches_per_token", "token_match_rate")
+
+
+def _run_meta(state: Dict) -> Dict:
+    """Provenance stamp for every BENCH_*.json: which jax, which devices,
+    which meshes produced these numbers.  Absolute tok_s is meaningless
+    without it — a baseline regenerated on a different runner class or
+    device count LOOKS like a perf change otherwise.  Never gated: the
+    gate and the perf.yml diff both pop `_run_meta` before comparing."""
+    dev = jax.devices()[0]
+    return {
+        "jax_version": jax.__version__,
+        "platform": dev.platform,
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "mesh_shapes": state.get("meshes", {}),
+    }
 
 
 def _gate_walk(base, cur, path=""):
@@ -772,8 +901,9 @@ def _gate_walk(base, cur, path=""):
             bad.append(f"{path.rstrip('.')}: {cur} > {ceil:.4f} "
                        f"(baseline {base}, +{DISP_TOK_INCREASE:.0%} ceiling)")
     elif key == "token_match_rate":
-        if cur < TOKEN_MATCH_FLOOR:
-            bad.append(f"{path.rstrip('.')}: {cur} < {TOKEN_MATCH_FLOOR} "
+        floor = _MATCH_FLOORS.get(path.split(".", 1)[0], TOKEN_MATCH_FLOOR)
+        if cur < floor:
+            bad.append(f"{path.rstrip('.')}: {cur} < {floor} "
                        f"(absolute accuracy floor; baseline {base})")
     return bad
 
@@ -813,6 +943,8 @@ def check_against(baseline_path: str, bench_json: Dict,
         base = json.load(f)
     base.pop("rows", None)
     base.pop("_meta", None)
+    base.pop("_run_meta", None)
+    bench_json = {k: v for k, v in bench_json.items() if k != "_run_meta"}
     if ran is not None:
         base = {k: v for k, v in base.items() if k in ran}
         bench_json = {k: v for k, v in bench_json.items() if k in ran}
@@ -924,7 +1056,7 @@ def main(argv=None) -> None:
     print(f"\n{len(ROWS)} benchmark rows")
     bench_json = state.get("bench_json", {})
     if json_path is not None:
-        payload = dict(bench_json, rows=ROWS)
+        payload = dict(bench_json, rows=ROWS, _run_meta=_run_meta(state))
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {json_path}")
@@ -945,6 +1077,7 @@ def main(argv=None) -> None:
                     "--write-baseline benchmarks/baseline.json` plus "
                     "`XLA_FLAGS=--xla_force_host_platform_device_count=8 "
                     "python benchmarks/run.py serve_sharded "
+                    "serve_throughput "
                     "--write-baseline benchmarks/baseline.json` (writes "
                     "MERGE per-section) — or one click via the "
                     "baseline-refresh workflow_dispatch job (absolute "
@@ -953,6 +1086,7 @@ def main(argv=None) -> None:
             "gate": {"tok_s_regression": TOK_S_REGRESSION,
                      "dispatches_per_token_increase": DISP_TOK_INCREASE,
                      "token_match_floor": TOKEN_MATCH_FLOOR,
+                     "match_floor_overrides": dict(_MATCH_FLOORS),
                      "ratio_keys": list(RATIO_KEYS)}}
         with open(write_baseline, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)

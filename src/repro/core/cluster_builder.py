@@ -129,6 +129,12 @@ class ClusterPlan:
     data_spec: Any = None
     mode: str = "train"
     fsdp: bool = True
+    # exact=True (default): bit-identical serving — gather-form TP and the
+    # drained pipeline schedule.  exact=False: throughput mode — psum-form
+    # (Megatron) TP for the reduction projections and the request-skewed
+    # pipeline schedule; streams are gated by a token-match band instead of
+    # equality (docs/serving.md §exactness contract).
+    exact: bool = True
     notes: List[str] = field(default_factory=list)
 
     def sharding(self, spec: P) -> NamedSharding:
@@ -146,7 +152,8 @@ class ClusterPlan:
         r = Rules(self.mesh, self.axes, fsdp=self.fsdp)
         return _tree_specs(
             params_shape, lambda p, s: _param_spec(p, s, r, self.cfg.family,
-                                                   mode=self.mode))
+                                                   mode=self.mode,
+                                                   exact=self.exact))
 
     def specs_for_caches(self, caches_shape: Any, batch: int = 0,
                          slot_table: bool = False,
@@ -219,7 +226,8 @@ class Rules:
 
 
 def _param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
-                r: Rules, family: str = "dense", mode: str = "train") -> P:
+                r: Rules, family: str = "dense", mode: str = "train",
+                exact: bool = True) -> P:
     """Rule table keyed on parameter names (see models/).
 
     mode="serve": the *reduction* projections (attention `wo`, MLP/MoE
@@ -256,7 +264,15 @@ def _param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
     # those plans fall through to the normal TP+FSDP rules — correctness
     # is unchanged, only the cross-device-count bit-identity contract is
     # scoped to TP-only serve plans (docs/serving.md).
-    if mode == "serve" and not r.dp_opts and name in (
+    #
+    # exact=False serve plans SKIP this rule: the reduction projections
+    # fall through to their normal column-sharded specs (contraction dim
+    # over `model` — Megatron psum-form TP).  The matching activation
+    # constraint is `hint(x, "psum")` in attention/mlp, which keeps the
+    # dot partial per shard and lets XLA insert one all-reduce — the
+    # paper's cross-FPGA float accumulation, accepted in exchange for the
+    # tok/s ceiling (docs/serving.md §exactness contract).
+    if mode == "serve" and exact and not r.dp_opts and name in (
             "wo", "shared_wo", "glu_wo", "down", "w_out"):
         return P(*([None] * len(shape)))
     # embeddings / head
@@ -415,7 +431,8 @@ def build_plan(cfg: ModelConfig, mesh: Mesh,
                params_shape: Any = None,
                caches_shape: Any = None,
                batch: int = 0,
-               mode: str = "train") -> ClusterPlan:
+               mode: str = "train",
+               exact: bool = True) -> ClusterPlan:
     """The Cluster Builder entry point used by launch/ and tests.
 
     mode="serve": weights are sharded over `model` only (no FSDP) — there
@@ -431,6 +448,11 @@ def build_plan(cfg: ModelConfig, mesh: Mesh,
     layer stack, the paper's encoder-per-cluster placement) and everything
     else replicates — the serving executor streams decode micro-steps
     through the stages with collective_permute (serving/executor.py).
+
+    exact=False (serve modes only): throughput plans.  serve switches the
+    reduction projections to psum-form TP; serve_pipeline switches the
+    executor to the request-skewed schedule with stage-local paged
+    arenas.  Token streams then satisfy a match-rate band, not equality.
     """
     if mode == "serve_pipeline":
         if "stage" not in mesh.shape:
@@ -441,7 +463,7 @@ def build_plan(cfg: ModelConfig, mesh: Mesh,
                         else "stage", stage="stage")
         plan = ClusterPlan(cfg=cfg, axes=axes, mesh=mesh,
                            topology=build_topology(cfg), mode=mode,
-                           fsdp=False)
+                           fsdp=False, exact=exact)
         if params_shape is not None:
             plan.param_specs = plan.specs_for_params(params_shape)
         if caches_shape is not None:
@@ -456,7 +478,8 @@ def build_plan(cfg: ModelConfig, mesh: Mesh,
         per_chip = cfg.param_count() * 2 / _axsize(mesh, axes.tp)
         fsdp = per_chip > 8e9  # keep FSDP only when capacity demands it
     plan = ClusterPlan(cfg=cfg, axes=axes, mesh=mesh,
-                       topology=build_topology(cfg), mode=mode, fsdp=fsdp)
+                       topology=build_topology(cfg), mode=mode, fsdp=fsdp,
+                       exact=exact)
     if params_shape is not None:
         plan.param_specs = plan.specs_for_params(params_shape)
     if caches_shape is not None:

@@ -16,6 +16,11 @@ cache are placed under the Cluster-Builder plan:
                          pipeline)
   --plan none            single-device (debug)
 
+`--no-exact` switches either serve plan to throughput mode: psum-form TP
+(serve) or the request-skewed pipeline schedule with stage-local KV
+arenas (serve_pipeline) — faster, token streams gated by a match-rate
+band instead of bitwise equality (docs/serving.md §exactness contract).
+
 `--dryrun` prints the chosen plan's per-leaf shardings (params + serving
 cache) and exits, so a deploy is inspectable before anything runs:
 
@@ -59,7 +64,25 @@ def _parse_mesh(spec: str, plan_mode: str):
     return make_mesh(shape, ("data", "model"))
 
 
-def _print_shardings(title: str, specs, shapes) -> None:
+# projections that *reduce* over a contracted dim: replicated + gather-form
+# under exact serving, column-sharded + psum-form under --no-exact
+_REDUCTION_LEAVES = ("wo", "shared_wo", "glu_wo", "down", "w_out")
+
+
+def _leaf_exactness(plan, path) -> str:
+    """Exactness mode of one plan leaf, for --dryrun (docs/serving.md
+    §exactness contract)."""
+    name = path[-1] if path else ""
+    if name in ("q", "scale") and len(path) > 1:  # quantized leaf pair
+        name = path[-2]
+    if plan.mode == "serve" and name in _REDUCTION_LEAVES:
+        return "gather(exact)" if plan.exact else "psum(throughput)"
+    if plan.mode == "serve_pipeline":
+        return "drained(exact)" if plan.exact else "skewed(throughput)"
+    return "exact"
+
+
+def _print_shardings(title: str, specs, shapes, plan=None) -> None:
     print(f"-- {title} " + "-" * max(1, 60 - len(title)))
 
     def walk(sp, sh, path=()):
@@ -67,7 +90,8 @@ def _print_shardings(title: str, specs, shapes) -> None:
             for k in sorted(sp):
                 walk(sp[k], sh[k], path + (k,))
             return
-        print(f"  {'/'.join(path):<40} {str(tuple(sh.shape)):<22} {sp}")
+        note = f"  [{_leaf_exactness(plan, path)}]" if plan is not None else ""
+        print(f"  {'/'.join(path):<40} {str(tuple(sh.shape)):<22} {sp}{note}")
 
     walk(specs, shapes)
 
@@ -80,8 +104,8 @@ def _dryrun(cfg, plan, paged: bool, engine_kw) -> None:
         jax.ShapeDtypeStruct((2,), jax.numpy.uint32))
     plan.param_specs = plan.specs_for_params(params_shape)
     print(f"serve --dryrun: arch={cfg.name} mode={plan.mode} "
-          f"mesh={dict(plan.mesh.shape)} paged={paged}")
-    _print_shardings("params", plan.param_specs, params_shape)
+          f"exact={plan.exact} mesh={dict(plan.mesh.shape)} paged={paged}")
+    _print_shardings("params", plan.param_specs, params_shape, plan=plan)
     if paged:
         ps = engine_kw.get("page_size", 16)
         cache_shape = jax.eval_shape(
@@ -94,7 +118,7 @@ def _dryrun(cfg, plan, paged: bool, engine_kw) -> None:
                                         slot_table=True, paged=paged)
     _print_shardings("serving cache" + (" (paged arena)" if paged else
                                         " (dense slots)"),
-                     cache_specs, cache_shape)
+                     cache_specs, cache_shape, plan=plan)
 
 
 def main(argv=None):
@@ -117,9 +141,19 @@ def main(argv=None):
                     help="mesh shape, e.g. 1,8 for (data, model) or 8 for "
                          "the serve_pipeline stage axis; default spans all "
                          "visible devices")
+    ap.add_argument("--exact", dest="exact", action="store_true",
+                    default=True,
+                    help="bit-identical serving (default): gather-form TP "
+                         "and the drained pipeline schedule")
+    ap.add_argument("--no-exact", dest="exact", action="store_false",
+                    help="throughput mode: psum-form TP (serve) / request-"
+                         "skewed schedule with stage-local KV arenas "
+                         "(serve_pipeline); token streams are gated by a "
+                         "match-rate band, not equality (docs/serving.md "
+                         "§exactness contract)")
     ap.add_argument("--dryrun", action="store_true",
-                    help="print the chosen plan's per-leaf shardings "
-                         "(params + serving cache) and exit")
+                    help="print the chosen plan's per-leaf shardings and "
+                         "exactness modes (params + serving cache) and exit")
     ap.add_argument("--no-plan", action="store_true",
                     help="deprecated alias for --plan none")
     ap.add_argument("--stream", choices=["poisson", "shared-prefix"],
@@ -169,14 +203,15 @@ def main(argv=None):
     plan = None
     if args.plan != "none":
         mesh = _parse_mesh(args.mesh, args.plan)
-        plan = build_plan(cfg, mesh, mode=args.plan)
+        plan = build_plan(cfg, mesh, mode=args.plan, exact=args.exact)
     # the engine's own paged="auto" predicate, shared so the CLI's int8
     # guard and --dryrun can never disagree with what the engine does
     paged = paged_eligible(cfg, plan) and args.engine == "cb"
     if args.kv_dtype == "int8" and not paged:
         raise SystemExit(
             "serve: --kv-dtype int8 needs the paged pool (all-attention "
-            "model under --plan none or serve)")
+            "model under --plan none, serve, or a --no-exact "
+            "serve_pipeline)")
     if args.dryrun:
         if plan is None:
             raise SystemExit("serve: --dryrun inspects a plan; pick "
@@ -214,7 +249,16 @@ def main(argv=None):
                                      spec_k=args.spec_k)
     elif args.draft_config:
         raise SystemExit("serve: --draft-config needs --engine cb")
-    engine = cls(model, params, max_batch=args.max_batch,
+    max_batch = args.max_batch
+    if (plan is not None and plan.mode == "serve_pipeline"
+            and not plan.exact and cls is ContinuousBatchingEngine):
+        n_stages = plan.mesh.shape[plan.axes.stage]
+        if max_batch % n_stages:
+            max_batch = -(-max_batch // n_stages) * n_stages
+            print(f"serve: request-skewed pipeline needs one lane group "
+                  f"per stage; max_batch {args.max_batch} -> {max_batch} "
+                  f"({n_stages} stages)")
+    engine = cls(model, params, max_batch=max_batch,
                  buckets=(16, 32, 64, 128), plan=plan, monitor=monitor,
                  decode_horizon=args.decode_horizon,
                  quant_weights=args.quant_weights, **kw)

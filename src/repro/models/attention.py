@@ -456,8 +456,10 @@ def attention(x: jax.Array, p: Params, cfg, positions: jax.Array,
 
     # serve_exact plans gather the head outputs here (the Fig. 14 gather
     # GMI before linear_o) so the replicated wo contraction is bit-exact;
-    # a no-op everywhere else
+    # serve_psum plans keep them head-sharded so the column-sharded wo
+    # contraction stays partial (one all-reduce); no-ops everywhere else
     out = hint(out.reshape(x.shape[0], x.shape[1], nh * hd), "gather")
+    out = hint(out, "psum")
     wo = fsdp_int8_gather(p["wo"], tp_dim=0)
     return dense(out, wo), new_cache
 

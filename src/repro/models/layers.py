@@ -115,8 +115,10 @@ def mlp(x: jax.Array, p: Params, cfg) -> jax.Array:
     else:
         h = a(h)
     # serve_exact plans gather the f-sharded activation so the replicated
-    # down-projection is bit-exact (no psum); a no-op everywhere else
-    return dense(hint(h, "gather"), wo)
+    # down-projection is bit-exact (no psum); serve_psum plans keep it
+    # f-sharded for the column-sharded wo (partial dot + one all-reduce);
+    # no-ops everywhere else
+    return dense(hint(hint(h, "gather"), "psum"), wo)
 
 
 # -- embedding / head -------------------------------------------------------

@@ -124,6 +124,9 @@ def moe_ffn(x: jax.Array, p: Params, cfg) -> Tuple[jax.Array, jax.Array]:
             hs = act(jnp.einsum("bsd,df->bsf", x, p["shared_wg"])) * hs
         else:
             hs = act(hs)
+        # serve_exact gathers / serve_psum keeps f-sharded before the
+        # shared_wo reduction, mirroring the dense mlp (no-ops elsewhere)
+        hs = hint(hint(hs, "gather"), "psum")
         y = y + jnp.einsum("bsf,fd->bsd", hs, p["shared_wo"])
 
     return y, aux.astype(jnp.float32)

@@ -31,7 +31,8 @@ def _cfg() -> Optional[Dict]:
 
 @contextmanager
 def hints(mesh, dp_axes: Tuple[str, ...] = ("data",), tp_axis: str = "model",
-          int8_gather: bool = False, serve_exact: bool = False):
+          int8_gather: bool = False, serve_exact: bool = False,
+          serve_psum: bool = False):
     """Enable activation constraints for code run inside this context.
 
     int8_gather=True turns FSDP weight all-gathers at `fsdp_int8_gather`
@@ -44,7 +45,15 @@ def hints(mesh, dp_axes: Tuple[str, ...] = ("data",), tp_axis: str = "model",
     partial-dot + psum whose summation order differs from single-device
     math, and (b) publishes the mesh via `paged_shard_ctx()` so attention
     can run the paged decode kernels under shard_map with the head axis
-    partitioned."""
+    partitioned.
+
+    serve_psum=True is the throughput-mode (exact=False) counterpart: it
+    arms the `hint(x, "psum")` call sites instead, pinning the activation's
+    last dim over tp so each shard's dot against its column-sharded
+    reduction weight stays partial and XLA inserts one all-reduce — the
+    Megatron form.  Mutually exclusive with serve_exact; paged_shard_ctx()
+    fires under either (the paged kernels don't touch the reduction
+    projections, so they are schedule-agnostic)."""
     prev = _cfg()
     _state.cfg = {
         "mesh": mesh,
@@ -54,6 +63,7 @@ def hints(mesh, dp_axes: Tuple[str, ...] = ("data",), tp_axis: str = "model",
         "tp_n": mesh.shape[tp_axis],
         "int8_gather": int8_gather,
         "serve_exact": serve_exact,
+        "serve_psum": serve_psum,
     }
     try:
         yield
@@ -62,11 +72,12 @@ def hints(mesh, dp_axes: Tuple[str, ...] = ("data",), tp_axis: str = "model",
 
 
 def paged_shard_ctx() -> Optional[Tuple]:
-    """(mesh, tp_axis, tp_n) when a serve_exact hints context is active —
-    the signal for attention to dispatch the paged decode kernels under
-    shard_map (page table replicated, head axis partitioned)."""
+    """(mesh, tp_axis, tp_n) when a serve_exact/serve_psum hints context is
+    active — the signal for attention to dispatch the paged decode kernels
+    under shard_map (page table replicated, head axis partitioned)."""
     c = _cfg()
-    if c is None or not c.get("serve_exact") or c["tp_n"] <= 1:
+    if c is None or not (c.get("serve_exact") or c.get("serve_psum")) \
+            or c["tp_n"] <= 1:
         return None
     return c["mesh"], c["tp"], c["tp_n"]
 
@@ -84,7 +95,9 @@ def hint(x: jax.Array, kind: str) -> jax.Array:
     'moe' (B,experts,cap,d) | 'state' (batch-only, any rank) |
     'last' (batch + last dim over tp, any rank) |
     'gather' (serve_exact only: all-gather the tp axis before a replicated
-    reduction projection)."""
+    reduction projection) |
+    'psum' (serve_psum only: pin the last dim over tp before a
+    column-sharded reduction projection — partial dot + one all-reduce)."""
     c = _cfg()
     if c is None:
         return x
@@ -104,6 +117,17 @@ def hint(x: jax.Array, kind: str) -> jax.Array:
         if not c.get("serve_exact"):
             return x
         spec = P(*((b,) + (None,) * (nd - 1)))
+    elif kind == "psum":
+        # Megatron psum-form TP (exact=False serve plans): keep the
+        # activation's contraction dim sharded over tp so the dot against
+        # the column-sharded reduction weight stays partial per shard and
+        # XLA inserts a single all-reduce after it — the paper's
+        # cross-device float accumulation.  A no-op outside serve_psum
+        # contexts (training already gets this from weight propagation).
+        if not c.get("serve_psum"):
+            return x
+        spec = P(*((b,) + (None,) * (nd - 2)
+                   + (fit(x.shape[-1], tp, c["tp_n"]),)))
     elif kind in ("btd", "state"):
         spec = P(*((b,) + (None,) * (nd - 1)))
     elif kind == "bshd":

@@ -116,9 +116,28 @@ class ContinuousBatchingEngine(EngineBase):
             raise ValueError(
                 "paged KV needs an all-attention, unwindowed, causal model "
                 "(recurrent state and ring buffers have no paged analogue) "
-                "under no plan or a mode='serve' plan (serve_pipeline "
+                "under no plan, a mode='serve' plan, or a throughput "
+                "(exact=False) serve_pipeline plan (the exact pipeline "
                 "streams the dense slot path)")
         self.paged = bool(paged)
+        # throughput pipeline (exact=False serve_pipeline): stage-local
+        # arenas + lane groups, one group per stage schedule offset
+        self._stage_n = 0
+        if (self.plan is not None and self.plan.mode == "serve_pipeline"
+                and not getattr(self.plan, "exact", True)):
+            if spec_config:
+                raise ValueError(
+                    "spec_config does not compose with the request-skewed "
+                    "serve_pipeline plan (the spec program has no skewed "
+                    "schedule); serve speculation from a mode='serve' plan")
+            self._stage_n = self.plan.mesh.shape[self.plan.axes.stage]
+            if self.max_batch % self._stage_n:
+                raise ValueError(
+                    f"request-skewed serve_pipeline splits the batch into "
+                    f"one lane group per stage: max_batch={self.max_batch} "
+                    f"must be a multiple of the stage count "
+                    f"{self._stage_n}")
+            self.sched.set_lane_groups(self._stage_n)
         assert kv_dtype in ("bf16", "int8"), kv_dtype
         if kv_dtype == "int8" and not self.paged:
             raise ValueError(
@@ -163,7 +182,8 @@ class ContinuousBatchingEngine(EngineBase):
                                   spec_catchup_tokens=0)
             self.kv = KVManager(num_pages, page_size, self.max_batch,
                                 self.max_pages,
-                                draft_num_pages=draft_num_pages)
+                                draft_num_pages=draft_num_pages,
+                                shards=self._stage_n or 1)
             self.max_hit_suffix = (max(self.buckets)
                                    if max_hit_suffix is None
                                    else max_hit_suffix)
@@ -176,8 +196,10 @@ class ContinuousBatchingEngine(EngineBase):
     _lane_pages = property(lambda self: self.kv._lane_pages)
 
     def kv_page_bytes(self) -> int:
-        """HBM bytes one arena page costs at this engine's kv_dtype."""
-        return kv_page_bytes(self.model.cfg, self.page_size, self.kv_dtype)
+        """Per-device HBM bytes one arena page costs at this engine's
+        kv_dtype (stage-sharded arenas hold 1/stages of the stack)."""
+        return kv_page_bytes(self.model.cfg, self.page_size, self.kv_dtype,
+                             shards=self.kv.shards if self.kv else 1)
 
     def _admit_dense(self, r: Request, sl: int, st) -> bool:
         """Batch-1 prefill + insert into slot `sl`; TTFT paid here."""
@@ -390,7 +412,8 @@ class ContinuousBatchingEngine(EngineBase):
 
         while pending or any(r is not None for r in slots):
             now = time.perf_counter() - t0
-            free = [i for i, r in enumerate(slots) if r is None]
+            free = self.sched.order_free(
+                [i for i, r in enumerate(slots) if r is None], slots)
             admitted, starved = self.sched.admission_cycle(
                 pending, free, now, self.executor.warm_buckets,
                 lambda r, sl: admit(r, sl, st))

@@ -19,6 +19,13 @@ kv-head dim partitioned (kernels/ops.py).  Every cross-device op is then
 either a gather or per-head-local math, so sharded token streams are
 bit-identical to single-device serving (tests/test_sharded_serving.py).
 
+Throughput mode (`plan.exact=False`): serve plans trace under
+`hints(serve_psum=True)` instead — column-sharded reduction projections
+with one all-reduce each (Megatron form), and serve_pipeline plans swap
+the drained GPipe decode program for the request-skewed schedule
+(`_pipeline_skew_decode_fn`).  Streams then satisfy the token-match band
+rather than bitwise equality (docs/serving.md §exactness contract).
+
 Host-side policy lives in serving/scheduler.py; page accounting in
 serving/kv_manager.py; serving/engine.py composes the three.
 """
@@ -75,8 +82,10 @@ class Executor:
             self._rep = plan.sharding(P())
             params = jax.device_put(params, self._param_shardings)
             if plan.mode == "serve":
+                ex = getattr(plan, "exact", True)
                 self._hints_kw = dict(mesh=plan.mesh, dp_axes=plan.axes.dp,
-                                      tp_axis=plan.axes.tp, serve_exact=True)
+                                      tp_axis=plan.axes.tp, serve_exact=ex,
+                                      serve_psum=not ex)
         self.params = params
         self._jit_prefill: Dict = {}
         self._jit_decode: Dict = {}
@@ -241,8 +250,14 @@ class Executor:
             return self._jit_decode[key]
         model = self.model
         if self.plan is not None and self.plan.mode == "serve_pipeline":
-            assert not paged, "serve_pipeline streams the dense slot path"
-            self._jit_decode[key] = self._pipeline_decode_fn(n)
+            if getattr(self.plan, "exact", True):
+                assert not paged, \
+                    "exact serve_pipeline streams the dense slot path"
+                self._jit_decode[key] = self._pipeline_decode_fn(n)
+            else:
+                assert paged, \
+                    "throughput serve_pipeline runs the paged arena path"
+                self._jit_decode[key] = self._pipeline_skew_decode_fn(n)
         elif paged:
 
             def pfn(params, caches, token, active, eos, budget,
@@ -698,5 +713,195 @@ class Executor:
                                    self._cache_shardings)
                                   + (self._rep,) * 4)
             kw["out_shardings"] = ((self._rep,) * 4
+                                   + (self._cache_shardings,))
+        return jax.jit(fn, donate_argnums=(1,), **kw)
+
+    # -- request-skewed pipelined decode (mode="serve_pipeline", exact=False) --
+
+    def _pipeline_skew_decode_fn(self, n: int):
+        """Fused n-step *paged* decode on the request-skewed pipeline.
+
+        The exact pipeline drains every decode step — each token costs
+        ``n_micro + n_stages - 1`` ticks and the drain idles
+        (stages-1)/stages of the mesh.  The throughput schedule
+        (plan.exact=False) skews stages across *request lane groups*
+        instead: the batch splits into n_stages contiguous groups, and at
+        tick t stage s runs group (t-s) mod G at decode step (t-s) // G —
+        while stage s holds group g's step k, stage s-1 is already on
+        group g+1, so the only bubbles left are the S-1 fill/drain ticks
+        of the whole horizon: n*S + S - 1 ticks for n steps against
+        n*(2S - 1) exact (docs/perf.md has the accounting).
+
+        Every stage keeps its *own* position counters (it ingests group
+        g's step-k token S-1 ticks after stage 0 did) and the last stage
+        commits a group's step — the verbatim `decode_steps` forced-queue
+        state machine on that group's rows — into the replicated lane
+        state via a psum-delta every stage folds in.  Group g's step-k
+        commit lands at tick g + k*G + S - 1 and the earliest step-(k+1)
+        read of those rows is at tick g + (k+1)*G (G = S), so each stage
+        observes exactly the state the sequential fused loop would have:
+        the schedule changes *when* lanes decode, never *what* they
+        decode, and streams differ from exact plans only through float
+        reduction order elsewhere in the plan.
+
+        The paged arenas ride the stage axis for free: `_stage_spec`
+        shards every scan-stacked leaf's leading period dim, which for an
+        arena leaf (n_rep, P, ps, KVH, hd) leaves stage s holding only its
+        own layers' pages — pipeline depth multiplies usable KV HBM
+        (kv_manager.kv_page_bytes(shards=)); the page table and counters
+        stay replicated routing metadata.
+        """
+        from repro.core.pipeline import gpipe_forward_perm, shard_map_compat
+        from repro.models.layers import lm_head, norm
+        from repro.models.transformer import block_apply
+
+        model, plan, cfg = self.model, self.plan, self.model.cfg
+        mesh, axis = plan.mesh, plan.axes.stage
+        n_stages = mesh.shape[axis]
+        n_rep, tail, kinds = layer_plan(cfg)
+        if tail or n_rep % n_stages:
+            raise ValueError(
+                f"serve_pipeline needs the scan-stacked periods to divide "
+                f"the stage axis: n_rep={n_rep}, tail={tail}, "
+                f"stages={n_stages}")
+        b = self.max_batch
+        if b % n_stages:
+            raise ValueError(
+                f"request-skewed serve_pipeline needs max_batch divisible "
+                f"by the stage count: batch={b}, stages={n_stages}")
+        n_groups = n_stages
+        mb = b // n_groups
+        total = n * n_groups + n_stages - 1
+        fwd = gpipe_forward_perm(n_stages)
+        np_ = len(kinds)
+        fcap = self.cache_len
+
+        def body(scan_p, rest_p, scan_c, pt, pos0, token, active, eos,
+                 budget, forced, flen, fptr):
+            sidx = jax.lax.axis_index(axis)
+            buf0 = jnp.zeros_like(
+                model.embed_inputs(rest_p, tokens=token[:mb][:, None]))
+
+            def tick(t, c2):
+                # lane state rides as one (4, b) int32 array — rows are
+                # (cur token, active, budget, forced ptr) — so the commit
+                # below is a single psum, not four (collective dispatch on
+                # the host mesh is the skew schedule's marginal cost)
+                buf, out, sc, pos_s, state = c2
+                m = t - sidx  # global micro-step this stage works on
+                stage_on = (m >= 0) & (m < n * n_groups)
+                mc = jnp.clip(m, 0, n * n_groups - 1)
+                g = mc % n_groups  # lane group
+                k_step = mc // n_groups  # its decode step
+                row0 = g * mb
+
+                st_sl = jax.lax.dynamic_slice(state, (0, row0), (4, mb))
+                cur_sl, rem_sl, fp_sl = st_sl[0], st_sl[2], st_sl[3]
+                act_sl = st_sl[1].astype(bool)
+                pos_sl = jax.lax.dynamic_slice_in_dim(pos_s, row0, mb, 0)
+                pt_sl = jax.lax.dynamic_slice_in_dim(pt, row0, mb, 0)
+                x0 = model.embed_inputs(rest_p, tokens=cur_sl[:, None])
+                x_in = jnp.where(sidx == 0, x0, buf)
+                # arena writes are active-gated inside attention (inactive
+                # or off-schedule rows land on the trash page), so the
+                # stage mask composes with the lane mask directly
+                wr = act_sl & stage_on
+
+                def period_body(h, xs):
+                    pp, pc = xs
+                    new_pc = {}
+                    for i in range(np_):
+                        h, ns, _ = block_apply(
+                            cfg, i, pp[f"b{i}"], h, pos_sl[:, None], None,
+                            pc[f"b{i}"], page_table=pt_sl, active=wr)
+                        new_pc[f"b{i}"] = ns
+                    return h, new_pc
+
+                h, sc = jax.lax.scan(period_body, x_in, (scan_p, sc))
+                y = jnp.where(stage_on, h, buf)
+
+                # last stage: finish the group's step — logits + the
+                # decode_steps forced-queue state machine on its rows
+                do = stage_on & (sidx == n_stages - 1)
+                hn = norm(y, rest_p["final_norm"], cfg)
+                logits = lm_head(hn, rest_p["embed"])[:, 0]
+                nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                fl_sl = jax.lax.dynamic_slice_in_dim(flen, row0, mb, 0)
+                eos_sl = jax.lax.dynamic_slice_in_dim(eos, row0, mb, 0)
+                fr_sl = jax.lax.dynamic_slice_in_dim(forced, row0, mb, 0)
+                pending = fp_sl < fl_sl
+                emitting = act_sl & ~pending
+                emit = jnp.where(emitting, nxt, -1)
+                rem_new = jnp.where(emitting, rem_sl - 1, rem_sl)
+                still = act_sl & (pending
+                                  | ((nxt != eos_sl) & (rem_new > 0)))
+                feed = jnp.where(
+                    pending,
+                    fr_sl[jnp.arange(mb), jnp.minimum(fp_sl, fcap - 1)],
+                    nxt)
+                cur_new = jnp.where(still, feed, PAD_TOKEN).astype(jnp.int32)
+                fp_new = jnp.where(act_sl & pending, fp_sl + 1, fp_sl)
+                out = jnp.where(
+                    do,
+                    jax.lax.dynamic_update_slice(out, emit[None, :],
+                                                 (k_step, row0)),
+                    out)
+
+                # exactly one stage has `do` per tick; a single psum-delta
+                # over the packed state folds its row update into every
+                # stage's replicated copy (int32 throughout, so exact)
+                new_sl = jnp.stack([cur_new, still.astype(jnp.int32),
+                                    rem_new, fp_new])
+                upd = jax.lax.dynamic_update_slice(state, new_sl, (0, row0))
+                upd = jnp.where(do, upd, state)
+                state = state + jax.lax.psum(upd - state, axis)
+                # this stage just ingested one token for its group's
+                # active lanes: advance its own counters
+                pos_s = jax.lax.dynamic_update_slice_in_dim(
+                    pos_s, jnp.where(wr, pos_sl + 1, pos_sl), row0, 0)
+                buf = jax.lax.ppermute(y, axis, fwd)
+                return (buf, out, sc, pos_s, state)
+
+            state0 = jnp.stack([token.astype(jnp.int32),
+                                active.astype(jnp.int32),
+                                budget.astype(jnp.int32),
+                                fptr.astype(jnp.int32)])
+            carry = (buf0, jnp.zeros((n, b), jnp.int32), scan_c, pos0,
+                     state0)
+            (_, out, sc, pos_s, state) = jax.lax.fori_loop(
+                0, total, tick, carry)
+            cur, act = state[0], state[1].astype(bool)
+            rem, fp = state[2], state[3]
+            # out lives on the last stage, counters agree on every stage
+            # (same (group, step) sequence, same committed lane masks) —
+            # share both so the outputs are replicated
+            toks = jax.lax.psum(
+                jnp.where(sidx == n_stages - 1, out, jnp.zeros_like(out)),
+                axis)
+            pos = jax.lax.psum(
+                jnp.where(sidx == 0, pos_s, jnp.zeros_like(pos_s)), axis)
+            return toks, cur, act, rem, fp, pos, sc
+
+        def fn(params, caches, token, active, eos, budget, forced, flen,
+               fptr):
+            rest_p = {k: v for k, v in params.items() if k != "scan"}
+            toks, cur, act, rem, fp, pos, sc = shard_map_compat(
+                body, mesh,
+                in_specs=(P(axis), P(), P(axis), P(), P(), P(), P(), P(),
+                          P(), P(), P(), P()),
+                out_specs=(P(), P(), P(), P(), P(), P(), P(axis)),
+            )(params["scan"], rest_p, caches["scan"], caches["pt"],
+              caches["pos"], token, active, eos, budget, forced, flen,
+              fptr)
+            return toks, cur, act, rem, fp, {"scan": sc, "tail": {},
+                                             "pos": pos,
+                                             "pt": caches["pt"]}
+
+        kw = {}
+        if self._param_shardings is not None:
+            kw["in_shardings"] = ((self._param_shardings,
+                                   self._cache_shardings)
+                                  + (self._rep,) * 7)
+            kw["out_shardings"] = ((self._rep,) * 5
                                    + (self._cache_shardings,))
         return jax.jit(fn, donate_argnums=(1,), **kw)

@@ -23,26 +23,42 @@ import numpy as np
 from repro.core.packing import PagePool, RadixPrefixCache
 
 
-def kv_page_bytes(cfg, page_size: int, kv_dtype: str) -> int:
-    """HBM bytes one KV arena page costs across the whole layer stack —
-    the unit for equal-HBM pool sizing (docs/perf.md §int8 pages).
+def kv_page_bytes(cfg, page_size: int, kv_dtype: str,
+                  shards: int = 1) -> int:
+    """HBM bytes one KV arena page costs *per device* — the unit for
+    equal-HBM pool sizing (docs/perf.md §int8 pages).
 
     bf16: 2 (k+v) * KVH * hd elements at 2 B per cache row; int8: the same
     elements at 1 B plus 2 * KVH f32 scales per row, i.e. (hd+4)/(2*hd) of
     the bf16 bytes — a fixed budget holds ~2x the pages at hd=64.
+
+    shards > 1: the arena is stage-sharded (exact=False serve_pipeline —
+    each stage holds only its own layers' slice of every page), so a page
+    costs 1/shards of the full stack per device and a per-device budget
+    buys shards× the pages.  The division only applies when the layer
+    stack actually divides; otherwise the arena replicates and a page
+    costs its full span everywhere — sizing with the divided figure there
+    is exactly the over-subscription bug the per-shard residency ledger
+    (`KVManager(shards=)`) guards against.
     """
     per_row = 2 * cfg.n_kv_heads * cfg.head_dim  # k+v elements
     if kv_dtype == "int8":
         row_bytes = per_row + 2 * cfg.n_kv_heads * 4  # values + f32 scales
     else:
         row_bytes = per_row * 2
-    return cfg.n_layers * page_size * row_bytes
+    n_layers = cfg.n_layers
+    if shards > 1 and n_layers % shards == 0:
+        n_layers //= shards
+    return n_layers * page_size * row_bytes
 
 
 def num_pages_for_hbm(cfg, page_size: int, kv_dtype: str,
-                      hbm_bytes: int) -> int:
-    """Pool size (usable pages) a byte budget buys at this dtype."""
-    return int(hbm_bytes // kv_page_bytes(cfg, page_size, kv_dtype))
+                      hbm_bytes: int, shards: int = 1) -> int:
+    """Pool size (usable pages) a *per-device* byte budget buys at this
+    dtype; with a stage-sharded arena (shards=stage depth) the same
+    budget holds shards× the pages."""
+    return int(hbm_bytes // kv_page_bytes(cfg, page_size, kv_dtype,
+                                          shards=shards))
 
 
 def spec_pool_split(cfg, draft_cfg, page_size: int, kv_dtype: str,
@@ -61,13 +77,17 @@ def paged_eligible(cfg, plan=None) -> bool:
     """Can this (config, plan) pair serve from the paged arena?  The one
     predicate the engine's ``paged="auto"`` and the serve CLI's guards
     share: all-attention, unwindowed, causal (recurrent state and ring
-    buffers have no paged analogue), under no plan or a ``mode="serve"``
-    plan (serve_pipeline streams the dense slot path)."""
+    buffers have no paged analogue), under no plan, a ``mode="serve"``
+    plan, or a throughput (exact=False) ``serve_pipeline`` plan — the
+    request-skewed schedule decodes straight from stage-local arenas,
+    while the *exact* pipeline streams the dense slot path."""
     from repro.models.transformer import layer_plan  # lazy: pulls jax
     _, _, kinds = layer_plan(cfg)
     return (all(k == "attn" for k in kinds) and not cfg.local_window
             and bool(cfg.causal)
-            and (plan is None or plan.mode == "serve"))
+            and (plan is None or plan.mode == "serve"
+                 or (plan.mode == "serve_pipeline"
+                     and not getattr(plan, "exact", True))))
 
 
 @dataclass
@@ -96,15 +116,32 @@ class KVManager:
     (`_lane_pages`), by the radix tree once registered, and by any lane
     that hit on it; `release()` drops the lane references and the tree
     keeps registered prefix pages alive for future hits.
+
+    shards > 1: the arena is sharded (stage-local arenas under a
+    throughput serve_pipeline plan, kv-head TP under serve), so one
+    logical page is physically a slab on *every* shard.  The manager then
+    keeps a per-shard residency ledger updated from the pages each
+    alloc/release/eviction ACTUALLY freed (`PagePool.decref` /
+    `RadixPrefixCache.evict` return counts) — not from the requested
+    full-span count, which over-frees per-shard bytes whenever a decref
+    lands on a still-shared page.  `assert_drained` cross-checks every
+    shard's ledger against the pool, so a cross-stage page leak (one
+    stage's slab freed, another's stranded) fails loudly at drain.
     """
 
     def __init__(self, num_pages: int, page_size: int, max_batch: int,
-                 max_pages: int, draft_num_pages: int = 0):
+                 max_pages: int, draft_num_pages: int = 0,
+                 shards: int = 1):
         self.pool = PagePool(num_pages, page_size)
         self.prefix_cache = RadixPrefixCache(self.pool)
         self.page_size = page_size
         self.max_pages = max_pages  # page-table row width (per-lane cap)
         self._lane_pages: List[Optional[List[int]]] = [None] * max_batch
+        self.shards = max(1, int(shards))
+        # per-shard resident page slabs (one logical page = one slab on
+        # each shard); kept explicitly so drift from mis-accounted frees
+        # is detectable rather than silently oversubscribing HBM
+        self._shard_pages = np.zeros(self.shards, np.int64)
         # speculative decoding's second arena: same page granularity, no
         # radix tree (draft KV is disposable lookahead — never shared, and
         # rejection rollback is a device-side position rewind, so the page
@@ -114,6 +151,24 @@ class KVManager:
             PagePool(draft_num_pages, page_size) if draft_num_pages else None)
         self._draft_lane_pages: List[Optional[List[int]]] = \
             [None] * max_batch
+
+    # -- per-shard residency ---------------------------------------------------
+
+    def _resident(self, n: int) -> None:
+        self._shard_pages += n
+
+    def _freed(self, n: int) -> None:
+        self._shard_pages -= n
+        assert (self._shard_pages >= 0).all(), self._shard_pages
+
+    def shard_pages_in_use(self, shard: int = 0) -> int:
+        return int(self._shard_pages[shard])
+
+    def stage_view(self, shard: int) -> "StageArenaView":
+        """Read-only accounting view of one shard's slice of the arena —
+        what a pipeline stage 'owns' (its layers' slabs of every resident
+        page) without handing it the allocator."""
+        return StageArenaView(self, shard)
 
     # -- capacity ------------------------------------------------------------
 
@@ -162,19 +217,23 @@ class KVManager:
         need_pages = pool.pages_for(need_positions)
         hit_pages, hit_len = self.prefix_cache.lookup(prompt)
         if hit_len and len(prompt) - hit_len > max_hit_suffix:
-            pool.decref(hit_pages)  # suffix too long: prefill is cheaper
+            # suffix too long: prefill is cheaper
+            self._freed(len(pool.decref(hit_pages)))
             hit_pages, hit_len = [], 0
         own_need = need_pages - len(hit_pages)
         if own_need > pool.free_pages:
-            self.prefix_cache.evict(own_need - pool.free_pages)
+            # eviction frees per-shard slabs: the ledger moves by the
+            # pages the tree ACTUALLY freed on every shard, not by the
+            # requested full-span count (shared pages stay resident)
+            self._freed(self.prefix_cache.evict(own_need - pool.free_pages))
         if own_need > pool.free_pages:
-            pool.decref(hit_pages)
+            self._freed(len(pool.decref(hit_pages)))
             return None
         draft_pages = draft_pt = draft_reset = None
         if self.draft_pool is not None:
             draft_need = self.draft_pool.pages_for(need_positions)
             if draft_need > self.draft_pool.free_pages:
-                pool.decref(hit_pages)
+                self._freed(len(pool.decref(hit_pages)))
                 return None
             draft_pages = self.draft_pool.alloc(draft_need)
             draft_pt = np.zeros((self.max_pages,), np.int32)
@@ -182,6 +241,7 @@ class KVManager:
             draft_reset = np.zeros((self.max_pages,), np.int32)
             draft_reset[:len(draft_pages)] = draft_pages
         own = pool.alloc(own_need)
+        self._resident(len(own))
         pages = hit_pages + own
         pt_row = np.zeros((self.max_pages,), np.int32)
         pt_row[:len(pages)] = pages
@@ -208,7 +268,7 @@ class KVManager:
         """Return lane `slot`'s page references (tree references keep
         registered prefix pages alive for future hits)."""
         if self._lane_pages[slot] is not None:
-            self.pool.decref(self._lane_pages[slot])
+            self._freed(len(self.pool.decref(self._lane_pages[slot])))
             self._lane_pages[slot] = None
         if self._draft_lane_pages[slot] is not None:
             # draft pages are never shared (no tree refs), so this frees
@@ -221,12 +281,45 @@ class KVManager:
 
     def assert_drained(self) -> None:
         """When the engine drains, the only live page references are the
-        radix tree's — anything else is a leak."""
+        radix tree's — anything else is a leak.  With a sharded arena the
+        per-shard ledgers must all agree with the pool: a shard whose
+        slab count drifted means some path freed (or kept) pages on one
+        stage's slice without the others — a cross-stage page leak."""
         assert all(p is None for p in self._lane_pages), self._lane_pages
         assert self.pool.pages_in_use == self.prefix_cache.cached_pages, (
             self.pool.pages_in_use, self.prefix_cache.cached_pages)
+        assert (self._shard_pages == self.pool.pages_in_use).all(), (
+            self._shard_pages, self.pool.pages_in_use)
         if self.draft_pool is not None:
             assert all(p is None for p in self._draft_lane_pages), \
                 self._draft_lane_pages
             assert self.draft_pool.pages_in_use == 0, \
                 self.draft_pool.pages_in_use
+
+
+class StageArenaView:
+    """One shard's (pipeline stage's) accounting window on the arena.
+
+    Stage s physically holds its own layers' slice of every page; this
+    view reports residency/capacity in that stage's terms — pages are
+    global (the page table is shared routing metadata), bytes are local.
+    Read-only: all allocation goes through the owning KVManager, which is
+    what keeps the shards' ledgers moving in lockstep.
+    """
+
+    def __init__(self, mgr: KVManager, shard: int):
+        assert 0 <= shard < mgr.shards, (shard, mgr.shards)
+        self._mgr, self.shard = mgr, shard
+
+    @property
+    def pages_in_use(self) -> int:
+        return self._mgr.shard_pages_in_use(self.shard)
+
+    @property
+    def free_pages(self) -> int:
+        return self._mgr.pool.free_pages
+
+    def resident_bytes(self, cfg, kv_dtype: str = "bf16") -> int:
+        """This stage's HBM actually held by resident pages."""
+        return self.pages_in_use * kv_page_bytes(
+            cfg, self._mgr.page_size, kv_dtype, shards=self._mgr.shards)

@@ -92,6 +92,51 @@ class Scheduler:
         self.spec_ladder: List[int] = []
         self.lane_spec_k = [0] * max_batch
         self.lane_accept = [1.0] * max_batch
+        # lane groups (request-skewed pipeline; set_lane_groups): lanes
+        # partition into contiguous groups, one per pipeline stage offset
+        self.max_batch = max_batch
+        self.n_lane_groups = 1
+
+    # -- lane groups (request-skewed serve_pipeline) -------------------------
+
+    def set_lane_groups(self, n_groups: int) -> None:
+        """Partition the lanes into `n_groups` contiguous groups — the
+        request-skewed pipeline's unit of schedule offset (stage s runs
+        group g while stage s-1 runs group g+1).  Groups are fixed slabs
+        of the batch (lane i belongs to group i // (max_batch/n_groups)):
+        a lane never changes group, so admission/preemption churn can't
+        interleave two groups' decode positions mid-flight."""
+        assert n_groups >= 1 and self.max_batch % n_groups == 0, \
+            (self.max_batch, n_groups)
+        self.n_lane_groups = n_groups
+
+    def lane_group(self, slot: int) -> int:
+        return slot // (self.max_batch // self.n_lane_groups)
+
+    def order_free(self, free: List[int],
+                   slots: Sequence[Optional[Request]]) -> List[int]:
+        """Admission order over free slots: fill the emptiest lane group
+        first (ties: lowest group, then lowest slot).  The skewed
+        schedule runs every group each tick, so a group left empty while
+        another saturates is pure bubble — balancing admissions across
+        groups is the host-side half of filling the pipeline, and because
+        every group gains occupants before any group gains a second one,
+        no group (and no lane) can starve behind a hot neighbour."""
+        if self.n_lane_groups <= 1:
+            return free
+        occ = [0] * self.n_lane_groups
+        for i, r in enumerate(slots):
+            if r is not None:
+                occ[self.lane_group(i)] += 1
+        # rank = the group's occupancy *as of this slot's admission* (one
+        # cycle admits down the list in order), so a burst round-robins
+        # the groups instead of packing the first one solid
+        rank, seen = {}, [0] * self.n_lane_groups
+        for s in sorted(free):
+            g = self.lane_group(s)
+            rank[s] = occ[g] + seen[g]
+            seen[g] += 1
+        return sorted(free, key=lambda s: (rank[s], self.lane_group(s), s))
 
     # -- queue ---------------------------------------------------------------
 

@@ -250,7 +250,7 @@ def serve_cb(state: Dict) -> None:
     stream = poisson_requests(np.random.default_rng(0), 24, cfg.vocab_size,
                               len_range=(4, 28), budgets=(32, 97), rate=400.0)
 
-    results, metrics, streams = {}, {}, {}
+    results, metrics, streams, predicted = {}, {}, {}, {}
     setups = (
         ("wave", WaveEngine, {}),
         ("cb_step", ContinuousBatchingEngine,
@@ -267,6 +267,9 @@ def serve_cb(state: Dict) -> None:
         for _ in range(3):
             passes.append(replay(eng, stream, warmup=False))
         done, wall, tok_s, ttft = sorted(passes, key=lambda p: p[1])[1]
+        if name == "cb":  # the predicted-vs-measured stamp (perf.yml band)
+            predicted["cb"] = _predicted_entry(
+                _calibrate_engine(eng), eng, done, tok_s)
         results[name] = tok_s
         streams[name] = {r.rid: tuple(r.tokens_out) for r in done}
         toks = sum(len(r.tokens_out) for r in done)
@@ -295,11 +298,14 @@ def serve_cb(state: Dict) -> None:
         f"dispatches/token drop {disp_drop:.1f}x (>=4 target), "
         "token streams bit-identical")
     state["serve_cb_speedup"] = results["cb"] / results["wave"]
+    from repro.core.plan_search import PREDICTION_BAND
     state.setdefault("bench_json", {})["serve_cb"] = {
         "engines": metrics,
         "fused_vs_single_step_tok_s": round(fused_speedup, 3),
         "dispatches_per_token_drop": round(disp_drop, 2),
         "streams_bit_identical": True,
+        # popped like _run_meta by the gate/diff; the band step reads it
+        "_predicted": dict(predicted, band=list(PREDICTION_BAND)),
     }
 
 
@@ -540,7 +546,7 @@ def serve_sharded(state: Dict) -> None:
     state.setdefault("meshes", {})["serve_sharded"] = dict(mesh.shape)
     setups = (("single", None),
               ("sharded", build_plan(cfg, mesh, mode="serve")))
-    metrics, streams = {}, {}
+    metrics, streams, predicted = {}, {}, {}
     with kops.pinned_impl("ref"):
         for name, plan in setups:
             eng = ContinuousBatchingEngine(
@@ -548,6 +554,8 @@ def serve_sharded(state: Dict) -> None:
                 max_decode_len=32, plan=plan)
             (done, wall, tok_s, ttft), streams[name], metrics[name] = \
                 _measure_cb_engine(eng, stream)
+            predicted[name] = _predicted_entry(
+                _calibrate_engine(eng), eng, done, tok_s)
             toks = sum(len(r.tokens_out) for r in done)
             metrics[name].update(prefix_hits=eng.stats["prefix_hits"])
             row(f"serve_sharded_{name}_per_token", wall / toks * 1e6,
@@ -569,11 +577,13 @@ def serve_sharded(state: Dict) -> None:
     row("serve_sharded_token_match_rate", match_rate,
         f"{matched}/{tot} tokens identical to single-device "
         "(bit-identity gated at the 0.99 absolute floor; expected 1.0)")
+    from repro.core.plan_search import PREDICTION_BAND
     state.setdefault("bench_json", {})["serve_sharded"] = {
         "engines": metrics,
         "devices": n_dev,
         "sharded_vs_single_tok_s": round(ratio, 3),
         "token_match_rate": round(match_rate, 4),
+        "_predicted": dict(predicted, band=list(PREDICTION_BAND)),
     }
 
 
@@ -780,6 +790,172 @@ def serve_spec(state: Dict) -> None:
     }
 
 
+PLAN_FAMILIES = ("smollm-135m", "ibert-base", "phi3-medium-14b",
+                 "moonshot-v1-16b-a3b")
+
+
+def _plans_dir() -> str:
+    import os
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)), "plans")
+
+
+def _plan_snapshot_path(arch: str) -> str:
+    import os
+    return os.path.join(_plans_dir(), arch.replace("-", "_") + ".json")
+
+
+def _default_profile():
+    """The traffic profile the committed plan snapshots are searched for:
+    benchmarks/profiles/default.json when present (the file CI's
+    plan-search job and `serve.py --plan auto --traffic` share), else the
+    built-in TrafficProfile defaults (kept identical)."""
+    import os
+    from repro.core.plan_search import TrafficProfile
+    p = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "profiles", "default.json")
+    return TrafficProfile.from_json(p) if os.path.exists(p) \
+        else TrafficProfile()
+
+
+def plan_search_bench(state: Dict) -> None:
+    """Cost-model plan auto-search over the CI config families
+    (docs/serving.md §plan auto-search): searches each family against the
+    default traffic profile and emits the chosen-plan snapshots that
+    `--check-plans` diffs against benchmarks/plans/ (the CI snapshot
+    gate) and `--write-plans` refreshes.  The search itself is pure
+    arithmetic on jaxpr-traced counts — deterministic, so any drift is a
+    code/profile change, never noise."""
+    from repro.configs import get_config
+    from repro.core.plan_search import search, to_snapshot
+
+    profile = _default_profile()
+    archs = state.get("plan_archs") or PLAN_FAMILIES
+    snaps = {}
+    for arch in archs:
+        cfg = get_config(arch)
+        t0 = time.perf_counter()
+        res = search(cfg, profile)
+        elapsed = time.perf_counter() - t0
+        ch = res.chosen
+        derived = (f"chosen={ch.key} pred={ch.tok_s:.0f}tok/s "
+                   f"ttft={ch.ttft_ms:.2f}ms hbm={ch.hbm_frac:.2f}"
+                   if ch else "chosen=NONE")
+        row(f"plan_search_{arch.replace('-', '_')}", elapsed * 1e6,
+            f"{derived} {res.n_feasible}/{len(res.scores)} feasible "
+            f"frontier={len(res.frontier)}")
+        snaps[arch] = to_snapshot(cfg, res)
+    state["plan_snapshots"] = snaps
+    state.setdefault("bench_json", {})["plan_search"] = {
+        "profile": profile.to_dict(),
+        "snapshots": snaps,
+    }
+
+
+def check_plans(snaps: Dict) -> int:
+    """Snapshot gate: diff freshly searched plans against the committed
+    benchmarks/plans/ files.  Structural drift (chosen candidate,
+    frontier, profile, cost-model version) or a missing snapshot fails;
+    predicted-number deltas are informational (plan_search.diff_snapshots
+    owns the split).  0 = clean, 1 = drift."""
+    import json
+    import os
+    from repro.core.plan_search import diff_snapshots
+    failed = False
+    for arch, snap in snaps.items():
+        path = _plan_snapshot_path(arch)
+        if not os.path.exists(path):
+            print(f"PLAN SNAPSHOT MISSING {path} (family {arch})")
+            failed = True
+            continue
+        with open(path) as f:
+            committed = json.load(f)
+        hard, info = diff_snapshots(committed, snap)
+        for line in info:
+            print(f"  plan {arch} (informational): {line}")
+        if hard:
+            print(f"PLAN SNAPSHOT DRIFT {arch} vs {path}:")
+            for line in hard:
+                print(f"  DRIFT {line}")
+            failed = True
+        else:
+            print(f"plan snapshot OK: {arch}")
+    if failed:
+        print("plan snapshots drifted: if the new choices are intended, "
+              "refresh with `python benchmarks/run.py plan_search "
+              "--write-plans` (CI: the refresh-plans workflow_dispatch "
+              "job) and commit benchmarks/plans/")
+        return 1
+    return 0
+
+
+def write_plans(snaps: Dict) -> None:
+    import json
+    import os
+    os.makedirs(_plans_dir(), exist_ok=True)
+    for arch, snap in snaps.items():
+        path = _plan_snapshot_path(arch)
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote plan snapshot {path}")
+
+
+def _calibrate_engine(eng, reps: int = 3, ns=(1, 8)):
+    """Two-point decode calibration for the predicted-vs-measured gate
+    (docs/perf.md §cost model): time the engine's fused n-step dispatch
+    at n=1 and n=8 on probe caches (the serving caches are untouched),
+    then split marginal step cost from fixed dispatch overhead — the
+    measured analogue of the paper's Table 1 T/I fit."""
+    from repro.core.plan_search import DeviceCalibration
+
+    ex = eng.executor
+    pargs = ((eng.page_size, eng.kv.num_pages, eng.max_pages,
+              eng.kv_dtype) if eng.paged else ())
+    st = ex.fresh_state(ex.init_caches(eng.paged, *pargs), eng.paged)
+    t = {}
+    for n in ns:
+        np.asarray(ex.decode(st, n, eng.paged))  # compile
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            np.asarray(ex.decode(st, n, eng.paged))
+            ts.append(time.perf_counter() - t0)
+        t[n] = float(np.median(ts))
+    # prefill probe: one batch-1 bucketed dispatch (the admission unit),
+    # at the engine's largest bucket (conservative for shorter prompts)
+    prompt = [[1] * (max(eng.buckets) - 1)]
+    jax.block_until_ready(ex.prefill_prompts(prompt, 1, bucket_cache=True))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            ex.prefill_prompts(prompt, 1, bucket_cache=True))
+        ts.append(time.perf_counter() - t0)
+    return DeviceCalibration.from_two_point(
+        t[ns[0]], ns[0], t[ns[1]], ns[1], t_prefill=float(np.median(ts)))
+
+
+def _predicted_entry(calib, eng, done, measured_tok_s: float) -> Dict:
+    """One engine's `_predicted` stamp: model prediction from the
+    calibrated costs + the stream's declared shape, next to measured."""
+    from repro.core.plan_search import predict_engine_tok_s
+
+    toks = sum(len(r.tokens_out) for r in done)
+    ptoks = sum(len(r.prompt) for r in done)
+    pred = predict_engine_tok_s(
+        calib, n_requests=len(done), total_tokens=toks,
+        prompt_tokens=ptoks, max_batch=eng.max_batch,
+        horizon=eng.decode_horizon)
+    return {
+        "predicted_tok_s": round(pred, 2),
+        "measured_tok_s": round(measured_tok_s, 2),
+        "ratio": round(pred / max(measured_tok_s, 1e-9), 4),
+        "t_step_ms": round(calib.t_step_s * 1e3, 4),
+        "t_dispatch_ms": round(calib.t_dispatch_s * 1e3, 4),
+        "t_prefill_ms": round(calib.t_prefill_s * 1e3, 4),
+    }
+
+
 BENCHES = {
     "table1": table1_encoder_latency,
     "table2": table2_full_model_eq1,
@@ -796,12 +972,14 @@ BENCHES = {
     "serve_sharded": serve_sharded,
     "serve_throughput": serve_throughput,
     "serve_spec": serve_spec,
+    "plan_search": plan_search_bench,
 }
 
 # benches whose state is produced by earlier benches in the full sweep
 _ORDER = ["table1", "table2", "table3", "table4", "sec9", "table5",
           "fig15", "gmi", "kernels", "serve_cb", "serve_paged",
-          "serve_quant", "serve_sharded", "serve_throughput", "serve_spec"]
+          "serve_quant", "serve_sharded", "serve_throughput", "serve_spec",
+          "plan_search"]
 
 # every gated section DECLARES the gate-owned metrics it emits (the leaf
 # names _gate_walk owns).  --list derives its table from these
@@ -920,6 +1098,43 @@ def _gated_paths(tree, path=""):
     return out
 
 
+def _pop_predicted(tree: Dict) -> Dict:
+    """Strip the per-section `_predicted` stamps (popped like `_run_meta`
+    before baseline comparison, so baselines committed before the
+    prediction gate existed stay valid and never grow the key)."""
+    return {k: ({kk: vv for kk, vv in v.items() if kk != "_predicted"}
+                if isinstance(v, dict) else v)
+            for k, v in tree.items()}
+
+
+def check_prediction_band(bench_json: Dict) -> List[str]:
+    """The predicted-vs-measured accuracy gate (docs/perf.md §cost
+    model): every `_predicted` entry a serve bench stamped must have its
+    predicted/measured tok/s ratio inside the band it declared.  Returns
+    violation strings (empty = within band)."""
+    bad = []
+    for sec, body in sorted(bench_json.items()):
+        if not isinstance(body, dict):
+            continue
+        pred = body.get("_predicted")
+        if not isinstance(pred, dict):
+            continue
+        lo, hi = pred.get("band", (0.0, float("inf")))
+        for name, entry in sorted(pred.items()):
+            if not isinstance(entry, dict) or "ratio" not in entry:
+                continue
+            r = entry["ratio"]
+            if not lo <= r <= hi:
+                bad.append(
+                    f"{sec}.{name}: predicted/measured tok/s ratio {r} "
+                    f"outside [{lo}, {hi}] (predicted "
+                    f"{entry.get('predicted_tok_s')}, measured "
+                    f"{entry.get('measured_tok_s')}) — the cost model "
+                    "has drifted from the device; recalibrate or fix "
+                    "core/plan_search before trusting its plans")
+    return bad
+
+
 def check_against(baseline_path: str, bench_json: Dict,
                   ran=None) -> int:
     """Exit-code-style perf gate: 0 = within thresholds, 1 = regression.
@@ -944,7 +1159,12 @@ def check_against(baseline_path: str, bench_json: Dict,
     base.pop("rows", None)
     base.pop("_meta", None)
     base.pop("_run_meta", None)
-    bench_json = {k: v for k, v in bench_json.items() if k != "_run_meta"}
+    base = _pop_predicted(base)
+    # enforce the predicted-vs-measured band BEFORE stripping the stamps:
+    # the band is self-declared per section, never baseline-relative
+    pred_bad = check_prediction_band(bench_json)
+    bench_json = _pop_predicted(
+        {k: v for k, v in bench_json.items() if k != "_run_meta"})
     if ran is not None:
         base = {k: v for k, v in base.items() if k in ran}
         bench_json = {k: v for k, v in bench_json.items() if k in ran}
@@ -968,7 +1188,11 @@ def check_against(baseline_path: str, bench_json: Dict,
         print(f"PERF GATE FAILED vs {baseline_path}:")
         for b in bad:
             print(f"  REGRESSION {b}")
-    if missing or bad:
+    if pred_bad:
+        print("PREDICTION BAND FAILED:")
+        for b in pred_bad:
+            print(f"  PREDICTION {b}")
+    if missing or bad or pred_bad:
         return 1
     print(f"perf gate OK vs {baseline_path}")
     return 0
@@ -1023,11 +1247,50 @@ def main(argv=None) -> None:
             print(f"\nWARNING: baseline lacks gated keys for "
                   f"{', '.join(stale)} — refresh it before merging "
                   "(--write-baseline merges per-section)")
+        # plan-snapshot staleness (the other committed trust artifact):
+        # structural check only — missing file, cost-model version skew,
+        # or a profile that no longer matches the default; full drift
+        # needs the search itself (`plan_search --check-plans`)
+        from repro.core.plan_search import COST_MODEL_VERSION
+        profile = _default_profile().to_dict()
+        print(f"\n{'plan family':<22} snapshot ({_plans_dir()})")
+        plan_stale = []
+        for arch in PLAN_FAMILIES:
+            path = _plan_snapshot_path(arch)
+            if not os.path.exists(path):
+                status = "MISSING (run plan_search --write-plans)"
+            else:
+                with open(path) as f:
+                    snap = json.load(f)
+                if snap.get("cost_model_version") != COST_MODEL_VERSION:
+                    status = (f"STALE: cost_model_version "
+                              f"{snap.get('cost_model_version')} != "
+                              f"{COST_MODEL_VERSION}")
+                elif snap.get("profile") != profile:
+                    status = "STALE: profile differs from default profile"
+                else:
+                    ch = (snap.get("chosen") or {}).get("key", "NONE")
+                    status = f"ok  chosen={ch}"
+            if not status.startswith("ok"):
+                plan_stale.append(arch)
+            print(f"{arch:<22} {status}")
+        if plan_stale:
+            print(f"\nWARNING: plan snapshot missing/stale for "
+                  f"{', '.join(plan_stale)} — refresh with `python "
+                  "benchmarks/run.py plan_search --write-plans` (choice "
+                  "drift itself is gated by plan_search --check-plans)")
         return
 
     json_path = _path_flag("--json")  # machine-readable perf trajectory
     check_path = _path_flag("--check-against")  # perf-regression gate
     write_baseline = _path_flag("--write-baseline")
+    plan_archs = _path_flag("--plan-archs")  # scope plan_search families
+    check_plans_flag = "--check-plans" in args  # plan snapshot gate
+    if check_plans_flag:
+        args.remove("--check-plans")
+    write_plans_flag = "--write-plans" in args  # plan snapshot refresh
+    if write_plans_flag:
+        args.remove("--write-plans")
     kv_dtype = _path_flag("--kv-dtype")  # int8: add the quantized workload
     if kv_dtype not in (None, "bf16", "int8"):
         raise SystemExit(f"--kv-dtype must be bf16 or int8, got {kv_dtype}")
@@ -1039,11 +1302,22 @@ def main(argv=None) -> None:
         names.append("serve_paged")
     if kv_dtype == "int8" and "serve_quant" not in names:
         names.append("serve_quant")
+    if (check_plans_flag or write_plans_flag) and "plan_search" not in names:
+        names.append("plan_search")
     unknown = [n for n in names if n not in BENCHES]
     if unknown:  # fail before running anything — compiles cost minutes
         raise SystemExit(
             f"unknown benchmark(s) {unknown}; choose from {sorted(BENCHES)}")
     state: Dict = {}
+    if plan_archs:
+        # CI matrix family names use underscores; arch registry uses dashes
+        requested = [a.strip().replace("_", "-")
+                     for a in plan_archs.split(",") if a.strip()]
+        from repro.configs import list_archs
+        bad_archs = [a for a in requested if a not in list_archs()]
+        if bad_archs:
+            raise SystemExit(f"--plan-archs: unknown arch(es) {bad_archs}")
+        state["plan_archs"] = tuple(requested)
     ran = set()
     for name in names:
         for dep in _NEEDS.get(name, []):
@@ -1069,7 +1343,10 @@ def main(argv=None) -> None:
         if os.path.exists(write_baseline):
             with open(write_baseline) as f:
                 payload = json.load(f)
-        payload.update(bench_json)
+        # `_predicted` stamps are machine-relative model diagnostics —
+        # they never enter the committed baseline (the band is enforced
+        # per-run, not baseline-relative)
+        payload.update(_pop_predicted(bench_json))
         payload["_meta"] = {
             "note": "perf-gate baseline; regenerate ON A QUIET BOX OF THE "
                     "CI RUNNER CLASS with `python benchmarks/run.py "
@@ -1091,9 +1368,16 @@ def main(argv=None) -> None:
         with open(write_baseline, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote baseline {write_baseline}")
+    rc = 0
+    if write_plans_flag:
+        write_plans(state.get("plan_snapshots", {}))
+    if check_plans_flag:
+        rc = max(rc, check_plans(state.get("plan_snapshots", {})))
     if check_path is not None:
-        sys.exit(check_against(check_path, bench_json,
-                               ran=ran - state.get("skipped", set())))
+        rc = max(rc, check_against(check_path, bench_json,
+                                   ran=ran - state.get("skipped", set())))
+    if rc:
+        sys.exit(rc)
 
 
 if __name__ == "__main__":

@@ -53,6 +53,29 @@ def pipeline_bubble_fraction(n_micro: int, n_stages: int) -> float:
     return (n_stages - 1) / (n_micro + n_stages - 1)
 
 
+def pipeline_ticks_per_step(n_stages: int, exact: bool) -> int:
+    """Stage-passes one decode step costs on an S-stage serving pipeline.
+
+    exact (drained GPipe schedule, docs/serving.md): every lane's token
+    must traverse all S stages and the pipeline drains before the next
+    step — 2S-1 ticks.  Throughput (request-skewed schedule): each stage
+    advances its own lane group every tick, so a full rotation emits one
+    token per lane in S ticks with no drain bubble.  Used by
+    core/plan_search to price `serve_pipeline` candidates."""
+    if n_stages <= 1:
+        return 1
+    return 2 * n_stages - 1 if exact else n_stages
+
+
+def decode_step_latency(t_stage: float, n_stages: int, d: float,
+                        exact: bool) -> float:
+    """One decode tick through the pipeline: Eq. 1 with X=T per stage
+    (a single-token step emits its output only when the stage finishes),
+    scaled by the schedule's ticks-per-step."""
+    ticks = pipeline_ticks_per_step(n_stages, exact)
+    return ticks * (t_stage + d)
+
+
 def estimate_table2(t_by_seq: Dict[int, float], x_by_seq: Dict[int, float],
                     d: float, n_stages: int) -> Dict[int, float]:
     """Reproduce the structure of the paper's Table 2 from measured T/X."""

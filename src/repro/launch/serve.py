@@ -96,6 +96,35 @@ def _print_shardings(title: str, specs, shapes, plan=None) -> None:
     walk(specs, shapes)
 
 
+def _print_pareto(cfg, result) -> None:
+    """The auto-search dump: profile, frontier table (chosen starred),
+    and — when nothing is feasible — the pruning reasons
+    (docs/serving.md §plan auto-search)."""
+    prof = result.profile
+    print(f"plan auto-search: arch={cfg.name} profile={prof.name} "
+          f"(rate={prof.arrival_rate:g}/s prompt~{prof.prompt_mean:g} "
+          f"out~{prof.output_mean:g} devices={prof.devices} "
+          f"hbm={prof.hbm_gb:g}GB max_batch={prof.max_batch})")
+    print(f"  {len(result.scores)} candidates, {result.n_feasible} "
+          f"feasible, {len(result.frontier)} on the Pareto frontier "
+          "(max tok/s, min ttft, min hbm):")
+    print(f"  {'candidate':<38} {'tok/s':>9} {'ttft_ms':>9} "
+          f"{'hbm':>5} {'lanes':>5} {'repl':>4}")
+    for s in result.frontier:
+        mark = "*" if result.chosen and s.key == result.chosen.key else " "
+        print(f" {mark}{s.key:<38} {s.tok_s:>9.0f} {s.ttft_ms:>9.3f} "
+              f"{s.hbm_frac:>5.2f} {s.lanes:>5d} {s.replicas:>4d}")
+    if result.chosen is not None:
+        print(f"  chosen: {result.chosen.key}")
+    else:
+        reasons = {}
+        for s in result.scores:
+            if not s.feasible:
+                reasons[s.reason] = reasons.get(s.reason, 0) + 1
+        for rsn, n in sorted(reasons.items()):
+            print(f"  infeasible x{n}: {rsn}")
+
+
 def _dryrun(cfg, plan, paged: bool, engine_kw) -> None:
     """Spec-only plan inspection: eval_shape everything, allocate nothing."""
     model = make_model(cfg, remat=False)
@@ -134,9 +163,18 @@ def main(argv=None):
     ap.add_argument("--decode-horizon", type=int, default=8,
                     help="max fused decode steps per dispatch (1 = the "
                          "one-dispatch-per-token baseline; docs/perf.md)")
-    ap.add_argument("--plan", choices=["none", "serve", "serve_pipeline"],
+    ap.add_argument("--plan",
+                    choices=["none", "serve", "serve_pipeline", "auto"],
                     default="serve",
-                    help="Cluster-Builder placement mode (docs/serving.md)")
+                    help="Cluster-Builder placement mode (docs/serving.md); "
+                         "auto = cost-model search over TP width / stage "
+                         "depth / exactness / paging knobs for the --traffic "
+                         "profile (docs/serving.md §plan auto-search)")
+    ap.add_argument("--traffic", default="",
+                    help="traffic-profile JSON for --plan auto (arrival "
+                         "rate, prompt/output mix, device + HBM budget); "
+                         "default: the built-in default profile "
+                         "(benchmarks/profiles/default.json mirrors it)")
     ap.add_argument("--mesh", default="",
                     help="mesh shape, e.g. 1,8 for (data, model) or 8 for "
                          "the serve_pipeline stage axis; default spans all "
@@ -200,10 +238,41 @@ def main(argv=None):
             "serve: --kv-dtype int8 needs the continuous-batching engine "
             "(the wave baseline decodes dense slot rows); drop --engine wave")
 
+    auto_choice = None
+    if args.plan == "auto":
+        from repro.core.plan_search import TrafficProfile, realize, search
+        profile = (TrafficProfile.from_json(args.traffic) if args.traffic
+                   else TrafficProfile())
+        result = search(cfg, profile)
+        _print_pareto(cfg, result)
+        if result.chosen is None:
+            raise SystemExit(
+                "serve: plan auto-search found no feasible candidate for "
+                "this traffic profile (pruning reasons above); raise "
+                "hbm_gb/devices or quantize")
+        auto_choice = result.chosen
+        cand = auto_choice.cand
+        if cand.paged and args.engine != "cb":
+            raise SystemExit("serve: the auto-chosen plan serves from the "
+                             "paged pool; drop --engine wave")
+        args.plan, args.exact = cand.mode, cand.exact
+        if cand.paged:
+            args.page_size, args.kv_dtype = cand.page_size, cand.kv_dtype
+        args.quant_weights = args.quant_weights or cand.quant_weights
+        if not args.mesh:
+            args.mesh = (f"{auto_choice.replicas},{cand.tp}"
+                         if cand.mode == "serve" else str(cand.stages))
+
     plan = None
     if args.plan != "none":
-        mesh = _parse_mesh(args.mesh, args.plan)
-        plan = build_plan(cfg, mesh, mode=args.plan, exact=args.exact)
+        if auto_choice is not None and args.dryrun:
+            # spec inspection needs no devices: realise on an AbstractMesh
+            # of the candidate's own shape (profile.devices may differ
+            # from this host)
+            plan = realize(cfg, auto_choice)
+        else:
+            mesh = _parse_mesh(args.mesh, args.plan)
+            plan = build_plan(cfg, mesh, mode=args.plan, exact=args.exact)
     # the engine's own paged="auto" predicate, shared so the CLI's int8
     # guard and --dryrun can never disagree with what the engine does
     paged = paged_eligible(cfg, plan) and args.engine == "cb"

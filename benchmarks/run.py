@@ -790,6 +790,146 @@ def serve_spec(state: Dict) -> None:
     }
 
 
+def serve_fleet(state: Dict) -> None:
+    """Fleet routing policy comparison (docs/fleet.md): N independent
+    engine replicas behind the FleetRouter serving a multi-tenant
+    shared-system-prompt Poisson stream, affinity dispatch vs the
+    round-robin control arm.
+
+    Affinity routes every request of one prefix group to the replica
+    whose radix tree holds that prefix, so the fleet pays ONE cold
+    prefill per prefix; round-robin spreads each group over all replicas
+    and pays up to one cold prefill per (replica, prefix) pair.  The
+    gated quantities are the affinity/round-robin ratios of aggregate
+    prefix_hit_tokens and tok/s — placement quality, not parallel
+    speedup: in-process replicas drain sequentially on the host, so the
+    wall-clock difference is exactly the skipped prefill work.
+
+    Every measured pass uses FRESH prefixes (same shape, new tokens):
+    replicas keep their radix trees between passes, and replaying one
+    stream would let round-robin's second pass hit prefixes its first
+    pass seeded on every replica, converging the two policies.
+
+    Per-request token streams must be identical to a single plain engine
+    serving the same stream (the fleet only chooses *where* a request
+    runs), so token_match_rate is gated at the bit-identity floor and
+    expected exactly 1.0."""
+    import jax as _jax
+    from repro.configs import get_config
+    from repro.models.transformer import init_params, make_model
+    from repro.serving.engine import ContinuousBatchingEngine
+    from repro.serving.router import FleetConfig, build_fleet
+    from repro.serving.stream import multi_prefix_requests, replay
+
+    cfg = get_config("smollm-135m").reduced()
+    model = make_model(cfg, remat=False)
+    params = init_params(cfg, _jax.random.PRNGKey(0))
+    n_replicas, n_prefixes, n_req, reps = 3, 8, 32, 3
+
+    rng = np.random.default_rng(0)
+
+    def mk_stream():
+        # heavy system prompts (bucket-256 prefill) over short chat turns:
+        # the regime where the cold-prefill bill the router routes around
+        # dominates — a prefix hit saves a 256-token prefill and pays only
+        # a handful of forced-token suffix steps
+        return multi_prefix_requests(rng, n_req, cfg.vocab_size,
+                                     n_prefixes=n_prefixes, prefix_len=240,
+                                     suffix_range=(2, 6), budgets=(3, 7),
+                                     rate=1500.0)
+
+    # streams[0] warms compilation x2 (cold prefill + hit-admission
+    # paths); streams[1] is a discarded fresh-prefix pass (warms the
+    # admission-batch shapes each policy's steady state actually hits);
+    # streams[2..reps+1] are the measured passes
+    pass_streams = [mk_stream() for _ in range(reps + 2)]
+
+    # pool sized so each pass's prefixes always fit (stale passes evict
+    # first under LRU) — hit counts stay structural, not pressure-timing.
+    # rebalance_margin is set high so the affinity arm measures pure
+    # placement; the deadline-aware override is exercised in tests.
+    engine_kw = dict(max_batch=4, buckets=(16, 32, 64, 256), num_pages=192)
+    systems = (
+        ("affinity", build_fleet(model, params, n_replicas,
+                                 config=FleetConfig(route="affinity",
+                                                    rebalance_margin=10_000),
+                                 **engine_kw)),
+        ("round_robin", build_fleet(model, params, n_replicas,
+                                    config=FleetConfig(route="round-robin"),
+                                    **engine_kw)),
+        ("single", ContinuousBatchingEngine(model, params, **engine_kw)),
+    )
+
+    metrics, streams = {}, {}
+    for name, sys_ in systems:
+        is_fleet = hasattr(sys_, "replicas")
+
+        def snap():
+            st = sys_.stats() if is_fleet else sys_.stats
+            return (st["prefix_hits"], st["prefix_hit_tokens"],
+                    (sum(p["prefills"] for p in st["replicas"])
+                     if is_fleet else st["prefills"]))
+        replay(sys_, pass_streams[0], warmup=False)  # compile, cold paths
+        replay(sys_, pass_streams[0], warmup=False)  # compile, hit paths
+        replay(sys_, pass_streams[1], warmup=False)  # fresh-prefix warm
+        hits0, hit_tok0, pre0 = snap()
+        passes, per_pass = [], []
+        for p in range(2, reps + 2):
+            done, wall, tok_s, _ = replay(sys_, pass_streams[p],
+                                          warmup=False)
+            passes.append((done, wall, tok_s))
+            per_pass.append({r.rid: tuple(r.tokens_out) for r in done})
+        hits, hit_tok, prefills = (b - a for a, b in zip((hits0, hit_tok0,
+                                                          pre0), snap()))
+        done, wall, tok_s = sorted(passes, key=lambda p: p[1])[reps // 2]
+        toks = sum(len(r.tokens_out) for r in done)
+        streams[name] = per_pass
+        metrics[name] = {
+            "tok_s": round(tok_s, 2),
+            "prefix_hits": int(hits),
+            "prefix_hit_tokens": int(hit_tok),
+            "prefills": int(prefills),
+        }
+        if is_fleet:
+            metrics[name]["by_kind"] = dict(
+                sorted(sys_.stats()["by_kind"].items()))
+        row(f"serve_fleet_{name}_per_token", wall / toks * 1e6,
+            f"{tok_s:.1f}tok/s hit_tokens={hit_tok} "
+            f"prefills={prefills} over {reps} fresh-prefix passes")
+
+    tot = matched = 0
+    for p in range(reps):
+        for arm in ("affinity", "round_robin"):
+            for rid, ts in streams["single"][p].items():
+                tot += len(ts)
+                matched += sum(a == b
+                               for a, b in zip(ts, streams[arm][p][rid]))
+    match_rate = matched / max(tot, 1)
+    hit_ratio = (metrics["affinity"]["prefix_hit_tokens"]
+                 / max(metrics["round_robin"]["prefix_hit_tokens"], 1))
+    tok_ratio = (metrics["affinity"]["tok_s"]
+                 / metrics["round_robin"]["tok_s"])
+    row("serve_fleet_affinity_vs_rr_hit_tokens", hit_ratio,
+        f"{n_replicas} replicas, {n_prefixes} prefix groups: affinity "
+        "prefix_hit_tokens over round-robin (>1 expected — one cold "
+        "prefill per prefix vs per replica x prefix)")
+    row("serve_fleet_affinity_vs_rr_tok_s", tok_ratio,
+        "affinity tok/s over round-robin on the same stream (>1 expected "
+        "— the skipped cold prefills; sequential drain, docs/fleet.md)")
+    row("serve_fleet_token_match_rate", match_rate,
+        f"{matched}/{tot} fleet tokens identical to the single plain "
+        "engine (placement-only routing; gated floor 0.99, expected "
+        "exactly 1.0)")
+    state.setdefault("bench_json", {})["serve_fleet"] = {
+        "engines": metrics,
+        "replicas": n_replicas,
+        "prefix_groups": n_prefixes,
+        "fleet_affinity_vs_rr_hit_tokens": round(hit_ratio, 3),
+        "fleet_affinity_vs_rr_tok_s": round(tok_ratio, 3),
+        "token_match_rate": round(match_rate, 4),
+    }
+
+
 PLAN_FAMILIES = ("smollm-135m", "ibert-base", "phi3-medium-14b",
                  "moonshot-v1-16b-a3b")
 
@@ -972,6 +1112,7 @@ BENCHES = {
     "serve_sharded": serve_sharded,
     "serve_throughput": serve_throughput,
     "serve_spec": serve_spec,
+    "serve_fleet": serve_fleet,
     "plan_search": plan_search_bench,
 }
 
@@ -979,7 +1120,7 @@ BENCHES = {
 _ORDER = ["table1", "table2", "table3", "table4", "sec9", "table5",
           "fig15", "gmi", "kernels", "serve_cb", "serve_paged",
           "serve_quant", "serve_sharded", "serve_throughput", "serve_spec",
-          "plan_search"]
+          "serve_fleet", "plan_search"]
 
 # every gated section DECLARES the gate-owned metrics it emits (the leaf
 # names _gate_walk owns).  --list derives its table from these
@@ -1002,6 +1143,8 @@ serve_throughput.gate_keys = ("tok_s", "dispatches_per_token",
                               "token_match_rate")
 serve_spec.gate_keys = ("tok_s", "dispatches_per_token",
                         "spec_vs_cb_tok_s", "token_match_rate")
+serve_fleet.gate_keys = ("tok_s", "fleet_affinity_vs_rr_hit_tokens",
+                         "fleet_affinity_vs_rr_tok_s", "token_match_rate")
 _NEEDS = {"table2": ["table1"], "table3": ["table1"],
           "table4": ["table1", "table3"], "table5": ["sec9"]}
 
@@ -1019,7 +1162,8 @@ RATIO_KEYS = ("paged_vs_dense_tok_s", "paged_vs_dense_concurrency",
               "fused_vs_single_step_tok_s", "dispatches_per_token_drop",
               "int8_vs_bf16_tok_s", "int8_vs_bf16_concurrency",
               "sharded_vs_single_tok_s", "throughput_vs_exact_tok_s",
-              "spec_vs_cb_tok_s")
+              "spec_vs_cb_tok_s", "fleet_affinity_vs_rr_hit_tokens",
+              "fleet_affinity_vs_rr_tok_s")
 # absolute floor: int8 greedy streams must match bf16 on >=99% of tokens —
 # accuracy is not machine-relative, so no baseline-relative band applies
 TOKEN_MATCH_FLOOR = 0.99

@@ -49,7 +49,9 @@ from repro.serving.kv_manager import kv_page_bytes, num_pages_for_hbm
 # Bump when the scoring math changes shape: snapshots embed it so a plan
 # drift caused by a cost-model revision is distinguishable from one
 # caused by a config/profile edit.
-COST_MODEL_VERSION = 1
+# v2: replicas became an enumerated candidate axis (the fleet router's
+# TP-width-vs-replica-count trade) instead of the implicit devices//width.
+COST_MODEL_VERSION = 2
 
 PAGE_SIZES = (8, 16, 32)
 KV_DTYPES = ("bf16", "int8")
@@ -151,6 +153,7 @@ class Candidate:
     page_size: int = 16       # 0 = dense slot table (exact pipeline)
     kv_dtype: str = "bf16"
     quant_weights: bool = False
+    replicas: int = 1         # independent engines behind the fleet router
 
     @property
     def width(self) -> int:
@@ -169,7 +172,7 @@ class Candidate:
         kv = ("kv=dense" if not self.paged
               else f"kv=ps{self.page_size}.{self.kv_dtype}")
         w = "w=int8" if self.quant_weights else "w=bf16"
-        return f"{core}.{ex}.{kv}.{w}"
+        return f"{core}.r{self.replicas}.{ex}.{kv}.{w}"
 
 
 def _divisors(n: int) -> List[int]:
@@ -181,6 +184,12 @@ def enumerate_candidates(cfg, profile: TrafficProfile) -> List[Candidate]:
 
     * serve: tp over divisors of the device budget; tp=1 has no
       gather/psum distinction so only exact=True is emitted.
+    * replicas: for each width, every divisor count the budget covers
+      (replicas x width <= devices) — the explicit TP-width-vs-replica-
+      count trade the fleet router serves (serving/router.py).  Fewer
+      replicas than the budget allows is enumerable (a fleet may reserve
+      devices) but is dominated at fixed width, so the frontier documents
+      the trade instead of hiding it in an implicit devices//width.
     * serve_pipeline: stage depths over divisors >= 2 whose layer stack
       divides (cluster_builder shards the scan dim; a non-dividing depth
       replicates and is never worth enumerating).  exact pipelines
@@ -194,27 +203,31 @@ def enumerate_candidates(cfg, profile: TrafficProfile) -> List[Candidate]:
     cands: List[Candidate] = []
     for tp in _divisors(profile.devices):
         exacts = (True,) if tp == 1 else (True, False)
-        for exact in exacts:
-            for ps in PAGE_SIZES:
-                for kvd in KV_DTYPES:
-                    for qw in (False, True):
-                        cands.append(Candidate(
-                            mode="serve", tp=tp, exact=exact,
-                            page_size=ps, kv_dtype=kvd,
-                            quant_weights=qw))
+        for rep in _divisors(profile.devices // tp):
+            for exact in exacts:
+                for ps in PAGE_SIZES:
+                    for kvd in KV_DTYPES:
+                        for qw in (False, True):
+                            cands.append(Candidate(
+                                mode="serve", tp=tp, exact=exact,
+                                page_size=ps, kv_dtype=kvd,
+                                quant_weights=qw, replicas=rep))
     stack = cfg.n_layers // period_length(cfg)
     for s in _divisors(profile.devices):
         if s < 2 or stack % s:
             continue
-        for qw in (False, True):
-            cands.append(Candidate(mode="serve_pipeline", stages=s,
-                                   exact=True, page_size=0,
-                                   kv_dtype="bf16", quant_weights=qw))
-            for ps in PAGE_SIZES:
-                for kvd in KV_DTYPES:
-                    cands.append(Candidate(
-                        mode="serve_pipeline", stages=s, exact=False,
-                        page_size=ps, kv_dtype=kvd, quant_weights=qw))
+        for rep in _divisors(profile.devices // s):
+            for qw in (False, True):
+                cands.append(Candidate(mode="serve_pipeline", stages=s,
+                                       exact=True, page_size=0,
+                                       kv_dtype="bf16", quant_weights=qw,
+                                       replicas=rep))
+                for ps in PAGE_SIZES:
+                    for kvd in KV_DTYPES:
+                        cands.append(Candidate(
+                            mode="serve_pipeline", stages=s, exact=False,
+                            page_size=ps, kv_dtype=kvd, quant_weights=qw,
+                            replicas=rep))
     return sorted(set(cands))
 
 
@@ -340,7 +353,9 @@ def score_candidate(cfg, cand: Candidate, profile: TrafficProfile,
     w = cand.width
     if w > profile.devices:
         return _infeasible(cand, "wider than device budget")
-    replicas = profile.devices // w
+    replicas = cand.replicas
+    if replicas * w > profile.devices:
+        return _infeasible(cand, "replica fleet exceeds device budget")
 
     # ---- HBM feasibility: weights first, then the KV pool -----------------
     wbytes_per_param = (INT8_WEIGHT_BYTES if cand.quant_weights else 2.0)

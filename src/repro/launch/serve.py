@@ -64,6 +64,36 @@ def _parse_mesh(spec: str, plan_mode: str):
     return make_mesh(shape, ("data", "model"))
 
 
+def _fleet_plans(cfg, args):
+    """Per-replica plans over disjoint device groups: --mesh is the shape
+    of ONE replica's mesh (default: an even split of the host), and the
+    fleet needs replicas x width devices (serving/replica.py raises
+    otherwise)."""
+    from repro.serving.replica import make_group_mesh, replica_device_groups
+    n = args.replicas
+    per = max(jax.device_count() // n, 1)
+    if args.plan == "serve_pipeline":
+        shape = (tuple(int(x) for x in args.mesh.split(","))
+                 if args.mesh else (per,))
+        if len(shape) != 1:
+            raise SystemExit("serve: serve_pipeline takes a 1-axis --mesh "
+                             "(the per-replica stage axis), e.g. --mesh 4")
+        axes = ("stage",)
+    else:
+        shape = (tuple(int(x) for x in args.mesh.split(","))
+                 if args.mesh else (1, per))
+        if len(shape) != 2:
+            raise SystemExit("serve: --plan serve takes a 2-axis --mesh "
+                             "(data, model) per replica, e.g. --mesh 1,2")
+        axes = ("data", "model")
+    width = 1
+    for s in shape:
+        width *= s
+    groups = replica_device_groups(n, width)
+    return [build_plan(cfg, make_group_mesh(g, shape, axes),
+                       mode=args.plan, exact=args.exact) for g in groups]
+
+
 # projections that *reduce* over a contracted dim: replicated + gather-form
 # under exact serving, column-sharded + psum-form under --no-exact
 _REDUCTION_LEAVES = ("wo", "shared_wo", "glu_wo", "down", "w_out")
@@ -225,6 +255,27 @@ def main(argv=None):
                     help="serve W8A8: projections/MLP run int8 x int8 -> "
                          "int32 (models/quantized.py); composes with any "
                          "--plan (specs derive from the quantized tree)")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="serve a fleet of N independent engine replicas "
+                         "behind the prefix-affinity router (docs/fleet.md)."
+                         "  0 (default) = 1, or the auto-chosen replica "
+                         "count under --plan auto.  With a plan, --mesh is "
+                         "per-replica and the fleet needs replicas x width "
+                         "devices (disjoint groups).")
+    ap.add_argument("--route",
+                    choices=["affinity", "round-robin", "least-loaded"],
+                    default="affinity",
+                    help="fleet dispatch policy (needs --replicas > 1): "
+                         "affinity routes each request to the replica whose "
+                         "radix tree should hold its longest prefix, "
+                         "falling back to least-loaded; round-robin is the "
+                         "control arm (docs/fleet.md)")
+    ap.add_argument("--shed-depth", type=int, default=0,
+                    help="fleet load shedding: reject a request when every "
+                         "replica's admission queue is this deep (x the "
+                         "--shed-budget multiplier); 0 = never shed")
+    ap.add_argument("--shed-budget", type=float, default=1.0,
+                    help="deadline-budget multiplier on --shed-depth")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.no_plan:
@@ -259,17 +310,35 @@ def main(argv=None):
         if cand.paged:
             args.page_size, args.kv_dtype = cand.page_size, cand.kv_dtype
         args.quant_weights = args.quant_weights or cand.quant_weights
-        if not args.mesh:
+
+    # --replicas 0 = auto: the plan search's replica count (its explicit
+    # TP-width-vs-replica-count axis) when --plan auto chose one, else 1
+    if args.replicas == 0:
+        args.replicas = (auto_choice.replicas if auto_choice is not None
+                         else 1)
+    if args.replicas > 1 and args.engine != "cb":
+        raise SystemExit("serve: --replicas > 1 serves a fleet of "
+                         "continuous-batching engines; drop --engine wave")
+    fleet = args.replicas > 1 and not args.dryrun
+    if auto_choice is not None and not args.mesh:
+        cand = auto_choice.cand
+        if fleet:  # per-replica mesh: each engine gets its device group
+            args.mesh = (f"1,{cand.tp}" if cand.mode == "serve"
+                         else str(cand.stages))
+        else:
             args.mesh = (f"{auto_choice.replicas},{cand.tp}"
                          if cand.mode == "serve" else str(cand.stages))
 
-    plan = None
+    plan, plans = None, None
     if args.plan != "none":
         if auto_choice is not None and args.dryrun:
             # spec inspection needs no devices: realise on an AbstractMesh
             # of the candidate's own shape (profile.devices may differ
             # from this host)
             plan = realize(cfg, auto_choice)
+        elif fleet:
+            plans = _fleet_plans(cfg, args)
+            plan = plans[0]  # representative: replicas differ only in devices
         else:
             mesh = _parse_mesh(args.mesh, args.plan)
             plan = build_plan(cfg, mesh, mode=args.plan, exact=args.exact)
@@ -327,10 +396,22 @@ def main(argv=None):
             print(f"serve: request-skewed pipeline needs one lane group "
                   f"per stage; max_batch {args.max_batch} -> {max_batch} "
                   f"({n_stages} stages)")
-    engine = cls(model, params, max_batch=max_batch,
-                 buckets=(16, 32, 64, 128), plan=plan, monitor=monitor,
-                 decode_horizon=args.decode_horizon,
-                 quant_weights=args.quant_weights, **kw)
+    if fleet:
+        from repro.serving.router import FleetConfig, build_fleet
+        router = build_fleet(
+            model, params, args.replicas, plans=plans,
+            config=FleetConfig(route=args.route,
+                               shed_depth=args.shed_depth,
+                               shed_budget=args.shed_budget),
+            max_batch=max_batch, buckets=(16, 32, 64, 128),
+            monitor=monitor, decode_horizon=args.decode_horizon,
+            quant_weights=args.quant_weights, **kw)
+        engine = router
+    else:
+        engine = cls(model, params, max_batch=max_batch,
+                     buckets=(16, 32, 64, 128), plan=plan, monitor=monitor,
+                     decode_horizon=args.decode_horizon,
+                     quant_weights=args.quant_weights, **kw)
 
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
@@ -349,6 +430,22 @@ def main(argv=None):
     wall = time.perf_counter() - t0
 
     toks = sum(len(r.tokens_out) for r in done)
+    if fleet:
+        st = engine.stats()
+        print(f"serve[fleet]: arch={cfg.name} plan={args.plan} "
+              f"replicas={args.replicas} route={args.route} "
+              f"requests={len(done)} shed={st['shed']} tokens={toks} "
+              f"wall={wall*1e3:.0f}ms throughput={toks/max(wall, 1e-9):.1f}"
+              f"tok/s by_kind={st['by_kind']} "
+              f"prefix_hit_tokens={st['prefix_hit_tokens']}")
+        for p in st["replicas"]:
+            print(f"  replica {p['replica']}: routed={p['routed']} "
+                  f"admitted={p.get('admitted', 0)} "
+                  f"hit_rate={p['prefix_hit_rate']:.2f} "
+                  f"wall={p['wall_s']*1e3:.0f}ms")
+        for req, reason in engine.shed[:3]:
+            print(f"  shed rid={req.rid}: {reason}")
+        return done
     lat = sorted((r.t_done - r.t_enqueue) * 1e3 for r in done)
     ttft = sorted((r.t_first_token - r.t_enqueue) * 1e3 for r in done)
     print(f"serve[{args.engine}]: arch={cfg.name} plan={args.plan} "

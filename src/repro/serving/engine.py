@@ -195,6 +195,17 @@ class ContinuousBatchingEngine(EngineBase):
     prefix_cache = property(lambda self: self.kv.prefix_cache)
     _lane_pages = property(lambda self: self.kv._lane_pages)
 
+    def hit_stats(self) -> dict:
+        """Prefix-reuse summary with the derived hit rate — the per-replica
+        figure the fleet router aggregates (serving/replica.py); dense
+        engines report zeros (no radix tree to hit)."""
+        s = self.stats
+        admitted = s.get("admitted", 0)
+        hits = s.get("prefix_hits", 0)
+        return {"admitted": admitted, "prefix_hits": hits,
+                "prefix_hit_tokens": s.get("prefix_hit_tokens", 0),
+                "prefix_hit_rate": hits / admitted if admitted else 0.0}
+
     def kv_page_bytes(self) -> int:
         """Per-device HBM bytes one arena page costs at this engine's
         kv_dtype (stage-sharded arenas hold 1/stages of the stack)."""

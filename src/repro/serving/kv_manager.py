@@ -164,6 +164,15 @@ class KVManager:
     def shard_pages_in_use(self, shard: int = 0) -> int:
         return int(self._shard_pages[shard])
 
+    def evict_cached(self, n_pages: int) -> int:
+        """Evict up to `n_pages` LRU cached prefix pages through the
+        per-shard ledger (the only correct external eviction path — a
+        bare `prefix_cache.evict()` would desync `_shard_pages`).
+        Returns the count actually freed (shared pages stay resident)."""
+        freed = self.prefix_cache.evict(n_pages)
+        self._freed(freed)
+        return freed
+
     def stage_view(self, shard: int) -> "StageArenaView":
         """Read-only accounting view of one shard's slice of the arena —
         what a pipeline stage 'owns' (its layers' slabs of every resident

@@ -1,0 +1,95 @@
+"""One serving replica of the fleet: a ContinuousBatchingEngine plus the
+identity and load/hit-rate surface the FleetRouter routes against.
+
+A replica is a whole single-process serving stack — its own serve plan,
+paged arena, and radix prefix tree — placed on a disjoint device group of
+the host mesh (multi-process `jax.distributed` fleets are out of scope;
+see docs/fleet.md).  The router never reaches inside the engine: the
+three methods it needs (`queue_depth`, `projected_occupancy`, `stats`)
+are the replica's published surface, so a future cross-process replica
+only has to speak this interface over a wire.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.engine import ContinuousBatchingEngine
+from repro.serving.scheduler import Request
+
+
+def replica_device_groups(n: int, width: int = 1,
+                          devices: Optional[Sequence] = None) -> List[list]:
+    """Partition the host's devices into `n` disjoint groups of `width`
+    (replica i gets devices [i*width, (i+1)*width)).  Raises when the
+    host cannot cover the fleet — the caller chose the replica count, so
+    silently overlapping groups would just serialize on the hardware."""
+    import jax
+    devices = list(devices) if devices is not None else jax.devices()
+    need = n * width
+    if need > len(devices):
+        raise ValueError(
+            f"fleet: {n} replicas x {width} devices = {need} devices, "
+            f"host has {len(devices)}")
+    return [devices[i * width:(i + 1) * width] for i in range(n)]
+
+
+def make_group_mesh(devs: Sequence, shape: Sequence[int],
+                    axes: Sequence[str]):
+    """A mesh over one replica's device group (jax.make_mesh always spans
+    every visible device, so fleet placement builds Mesh directly)."""
+    from jax.sharding import Mesh
+    arr = np.empty(len(devs), dtype=object)
+    for i, d in enumerate(devs):
+        arr[i] = d
+    return Mesh(arr.reshape(tuple(shape)), tuple(axes))
+
+
+class Replica:
+    """Engine + identity.  Owns nothing the engine doesn't already own —
+    the value added is the routing surface and per-replica stat deltas."""
+
+    def __init__(self, idx: int, engine: ContinuousBatchingEngine):
+        self.idx = idx
+        self.engine = engine
+        self.routed = 0            # requests this replica was handed
+        self.wall_s = 0.0          # cumulative run() wall time
+        self._stat0 = dict(engine.stats)  # baseline for delta stats
+
+    # -- routing surface -----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.routed += 1
+        self.engine.submit(req)
+
+    def queue_depth(self) -> int:
+        return self.engine.sched.queue_depth()
+
+    def projected_occupancy(self) -> int:
+        return self.engine.sched.projected_occupancy()
+
+    def run(self) -> List[Request]:
+        import time
+        t0 = time.perf_counter()
+        done = self.engine.run()
+        self.wall_s += time.perf_counter() - t0
+        return done
+
+    # -- per-replica stats (prefix hit rates for the router) -----------------
+
+    def stats(self) -> Dict[str, float]:
+        """Engine stat deltas since this replica joined the fleet, plus
+        the derived prefix hit rate the router's affinity accounting
+        reads (hits / admissions; 0.0 before any admission)."""
+        cur = self.engine.stats
+        out: Dict[str, float] = {"replica": self.idx, "routed": self.routed,
+                                 "wall_s": round(self.wall_s, 6)}
+        for k in ("admitted", "completed", "prefills",
+                  "prefix_hits", "prefix_hit_tokens", "preemptions"):
+            if k in cur:
+                out[k] = cur[k] - self._stat0.get(k, 0)
+        admitted = out.get("admitted", 0)
+        out["prefix_hit_rate"] = (out.get("prefix_hits", 0) / admitted
+                                  if admitted else 0.0)
+        return out

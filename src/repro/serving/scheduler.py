@@ -144,6 +144,22 @@ class Scheduler:
         req.t_enqueue = time.perf_counter()
         self.queue.append(req)
 
+    def queue_depth(self) -> int:
+        """Requests waiting for admission (the fleet router's shedding
+        signal: serving/router.py sheds when every replica's depth
+        exceeds its configured budget)."""
+        return len(self.queue)
+
+    def projected_occupancy(self) -> int:
+        """Projected queued work in token-steps: per waiting request, the
+        bucketed prompt cost (prefill rides a bucket-padded dispatch) plus
+        the decode budget still owed.  The fleet router's least-loaded
+        placement ranks replicas by this figure — it is the queue-side
+        analogue of `order_free`'s per-group occupancy ranking, exported
+        because between `run()` drains the queue is the whole backlog."""
+        return sum(self.policy.bucket_of(len(r.prompt)) + r.remaining()
+                   for r in self.queue)
+
     def take_queue(self) -> List[Request]:
         pending, self.queue = self.queue, []
         return pending

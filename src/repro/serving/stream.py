@@ -64,6 +64,36 @@ def shared_prefix_requests(rng: np.random.Generator, n: int, vocab_size: int,
             for i in range(n)]
 
 
+def multi_prefix_requests(rng: np.random.Generator, n: int, vocab_size: int,
+                          n_prefixes: int = 4, prefix_len: int = 48,
+                          suffix_range: Tuple[int, int] = (3, 9),
+                          budgets: Union[int, Tuple[int, int]] = (16, 48),
+                          rate: float = 0.0) -> List[Request]:
+    """n requests drawn over ``n_prefixes`` distinct shared system prompts
+    (uniform random assignment) — the multi-tenant ingress the fleet
+    router's prefix-affinity dispatch targets: each prefix group hits one
+    replica's radix tree under affinity routing, while round-robin pays a
+    cold prefill per (replica, prefix) pair (docs/fleet.md)."""
+    prefixes = [rng.integers(0, vocab_size, prefix_len).astype(np.int32)
+                for _ in range(n_prefixes)]
+    which = rng.integers(0, n_prefixes, n)
+    suffixes = rng.integers(suffix_range[0], suffix_range[1], n)
+    if isinstance(budgets, tuple):
+        buds = rng.integers(budgets[0], budgets[1], n)
+    else:
+        buds = np.full(n, budgets)
+    gaps = (rng.exponential(1.0 / rate, n) if rate > 0 else np.zeros(n))
+    arrivals = np.cumsum(gaps)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [prefixes[which[i]],
+                         rng.integers(0, vocab_size, suffixes[i])
+                         .astype(np.int32)]),
+                    max_new_tokens=int(buds[i]),
+                    t_arrival=float(arrivals[i]))
+            for i in range(n)]
+
+
 def clone_requests(reqs: List[Request]) -> List[Request]:
     """Fresh Request objects over the same prompts/budgets/arrivals (for
     replaying one stream through several engines)."""

@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Docs gate: intra-repo links and CLI snippets must match the tree.
+
+Two checks over README.md, ROADMAP.md and docs/*.md (the curated docs —
+not the paper/issue scratch files):
+
+1. **Links** — every relative markdown link `[text](path)` must resolve
+   to a file or directory in the repo (fragments are stripped; http(s)/
+   mailto/pure-anchor links are skipped).  Docs rot silently when a file
+   moves; this makes the rot a CI failure.
+
+2. **CLI snippets** — inside fenced code blocks, any command line that
+   invokes the serving CLI (`repro.launch.serve` / `launch/serve.py`) or
+   the bench driver (`benchmarks/run.py`) may only use flags the tool
+   actually accepts: serve flags are parsed from `--help` (so the check
+   tracks argparse, not a hand-kept list), run.py flags from its source
+   literals (it parses argv by hand).  A renamed flag breaks the doc's
+   copy-paste path; this catches it at PR time.
+
+Exit 0 clean, 1 with one line per problem.  Run from anywhere:
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+from typing import List, Set
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```[^\n]*\n(.*?)```", re.S)
+FLAG_RE = re.compile(r"(?<![\w-])--[a-zA-Z][\w-]*")
+# a command line "uses" a tool when it names its module or script path
+SERVE_RE = re.compile(r"(repro\.launch\.serve|launch/serve\.py)")
+RUNPY_RE = re.compile(r"benchmarks/run\.py")
+
+
+def doc_files() -> List[str]:
+    files = [os.path.join(ROOT, n) for n in ("README.md", "ROADMAP.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, n) for n in os.listdir(docs)
+                        if n.endswith(".md"))
+    return [f for f in files if os.path.exists(f)]
+
+
+def check_links(path: str, text: str, errors: List[str]) -> None:
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target = target.split("#", 1)[0]
+        if not target:  # pure in-page anchor
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), target))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, ROOT)}: broken link "
+                          f"-> {m.group(1)}")
+
+
+def serve_flags() -> Set[str]:
+    """The serving CLI's accepted flags, from argparse itself."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--help"],
+        capture_output=True, text=True, env=env, cwd=ROOT)
+    if out.returncode != 0:
+        raise SystemExit("check_docs: `repro.launch.serve --help` failed:\n"
+                         + out.stderr)
+    return set(FLAG_RE.findall(out.stdout))
+
+
+def runpy_flags() -> Set[str]:
+    """benchmarks/run.py parses argv by hand — its accepted flags are the
+    `--...` string literals in the source."""
+    with open(os.path.join(ROOT, "benchmarks", "run.py")) as f:
+        src = f.read()
+    return set(FLAG_RE.findall(" ".join(re.findall(r"[\"']([^\"']*)[\"']",
+                                                   src))))
+
+
+def check_cli_snippets(path: str, text: str, serve: Set[str],
+                       runpy: Set[str], errors: List[str]) -> None:
+    rel = os.path.relpath(path, ROOT)
+    for block in FENCE_RE.findall(text):
+        # join shell line continuations so a wrapped command is one line
+        for line in block.replace("\\\n", " ").splitlines():
+            for tool_re, known, name in ((SERVE_RE, serve, "serve.py"),
+                                         (RUNPY_RE, runpy,
+                                          "benchmarks/run.py")):
+                m = tool_re.search(line)
+                if not m:
+                    continue
+                used = set(FLAG_RE.findall(line[m.end():]))
+                for flag in sorted(used - known):
+                    errors.append(f"{rel}: snippet flag {flag} not "
+                                  f"accepted by {name}: {line.strip()}")
+
+
+def main() -> int:
+    errors: List[str] = []
+    serve, runpy = serve_flags(), runpy_flags()
+    files = doc_files()
+    for path in files:
+        with open(path) as f:
+            text = f.read()
+        check_links(path, text, errors)
+        check_cli_snippets(path, text, serve, runpy, errors)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s) in {len(files)} files")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"check_docs: OK ({len(files)} files, "
+          f"{len(serve)} serve flags, {len(runpy)} run.py flags)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

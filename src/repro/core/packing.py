@@ -270,6 +270,24 @@ class RadixPrefixCache:
             self.hits += 1
         return pages, len(pages) * ps
 
+    def peek(self, tokens: np.ndarray) -> int:
+        """Length (in positions) of the cached page-aligned prefix a
+        `lookup` of `tokens` would return, WITHOUT taking references,
+        bumping the LRU clock, or counting a hit/lookup.  Advisory only —
+        the answer can change before an admission actually calls
+        `lookup` — used by the disaggregated scheduler to classify queued
+        requests into the prefill vs decode-ingest queue."""
+        ps = self.pool.page_size
+        max_pages = max(len(tokens) - 1, 0) // ps
+        node, n = self.root, 0
+        for j in range(max_pages):
+            child = node.children.get(self._page_key(tokens, j))
+            if child is None:
+                break
+            n += 1
+            node = child
+        return n * ps
+
     def insert(self, tokens: np.ndarray, pages: Sequence[int]) -> int:
         """Register a prompt's fully-covered pages; ``pages[j]`` must back
         positions [j*ps, (j+1)*ps).  Pages already on the walk are left as

@@ -51,7 +51,10 @@ from repro.serving.kv_manager import kv_page_bytes, num_pages_for_hbm
 # caused by a config/profile edit.
 # v2: replicas became an enumerated candidate axis (the fleet router's
 # TP-width-vs-replica-count trade) instead of the implicit devices//width.
-COST_MODEL_VERSION = 2
+# v3: disaggregated prefill:decode splits became an enumerated axis —
+# priced with a shipped-bytes-per-admission transfer term (paper hop
+# latency) and prefill-pool queueing, pruned when either pool saturates.
+COST_MODEL_VERSION = 3
 
 PAGE_SIZES = (8, 16, 32)
 KV_DTYPES = ("bf16", "int8")
@@ -154,10 +157,18 @@ class Candidate:
     kv_dtype: str = "bf16"
     quant_weights: bool = False
     replicas: int = 1         # independent engines behind the fleet router
+    # disaggregated pools (engine disagg=(P, D)): device counts for the
+    # prefill and decode pools; (0, 0) = colocated.  Disagg candidates
+    # ride mode="serve" tp=1 (each pool replicates the model in-process —
+    # docs/serving.md §disaggregated serving).
+    disagg_prefill: int = 0
+    disagg_decode: int = 0
 
     @property
     def width(self) -> int:
         """Devices one replica occupies."""
+        if self.disagg_prefill:
+            return self.disagg_prefill + self.disagg_decode
         return self.tp if self.mode == "serve" else self.stages
 
     @property
@@ -168,6 +179,8 @@ class Candidate:
     def key(self) -> str:
         core = (f"serve.tp{self.tp}" if self.mode == "serve"
                 else f"pipe.s{self.stages}")
+        if self.disagg_prefill:
+            core += f".pd{self.disagg_prefill}-{self.disagg_decode}"
         ex = "exact" if self.exact else "tput"
         kv = ("kv=dense" if not self.paged
               else f"kv=ps{self.page_size}.{self.kv_dtype}")
@@ -198,6 +211,13 @@ def enumerate_candidates(cfg, profile: TrafficProfile) -> List[Candidate]:
       the stage-local paged arena.
     * int8 KV requires the paged arena (engine guard), so dense slots
       are bf16-only; quant_weights composes with everything.
+    * disagg: every prefill:decode split of the device budget (P >= 1,
+      D = devices - P), paged tp=1 only — page shipping is the handoff
+      unit and each pool replicates the model.  Priced with the transfer
+      + queueing terms in `score_candidate`; today's in-process pools
+      never beat colocated tp=1 on TTFT alone, so these document the
+      trade on the frontier rather than win it (the device-parallel win
+      arrives with multi-process fleets — docs/serving.md).
     """
     from repro.models.transformer import period_length
     cands: List[Candidate] = []
@@ -228,6 +248,15 @@ def enumerate_candidates(cfg, profile: TrafficProfile) -> List[Candidate]:
                             mode="serve_pipeline", stages=s, exact=False,
                             page_size=ps, kv_dtype=kvd, quant_weights=qw,
                             replicas=rep))
+    for p in range(1, profile.devices):
+        d = profile.devices - p
+        for ps in PAGE_SIZES:
+            for kvd in KV_DTYPES:
+                for qw in (False, True):
+                    cands.append(Candidate(
+                        mode="serve", tp=1, exact=True, page_size=ps,
+                        kv_dtype=kvd, quant_weights=qw, replicas=1,
+                        disagg_prefill=p, disagg_decode=d))
     return sorted(set(cands))
 
 
@@ -356,6 +385,12 @@ def score_candidate(cfg, cand: Candidate, profile: TrafficProfile,
     replicas = cand.replicas
     if replicas * w > profile.devices:
         return _infeasible(cand, "replica fleet exceeds device budget")
+    disagg = cand.disagg_prefill > 0
+    if disagg:
+        # both pools replicate the full model in-process, so every
+        # per-device quantity below is the tp=1 figure; the split's own
+        # costs (transfer + prefill queueing) are priced after TTFT
+        w = 1
 
     # ---- HBM feasibility: weights first, then the KV pool -----------------
     wbytes_per_param = (INT8_WEIGHT_BYTES if cand.quant_weights else 2.0)
@@ -453,6 +488,33 @@ def score_candidate(cfg, cand: Candidate, profile: TrafficProfile,
         ttft = t_pre_dev + hw.dispatch_s
     ttft += step  # first decoded token rides the next tick
 
+    if disagg:
+        # ---- disaggregated pools: transfer + queueing -----------------
+        # Shipped bytes per cold admission: the prompt's pages (int8
+        # arenas ship their scale planes too — kv_page_bytes counts them)
+        # cross the pool link once, plus the paper's hop latency (Eq. 1's
+        # d) and one ingest dispatch on the decode pool.
+        p_pool = cand.disagg_prefill
+        n_ship = max(int(math.ceil(profile.prompt_mean / cand.page_size)),
+                     1)
+        ship_bytes = n_ship * kv_page_bytes(cfg, cand.page_size,
+                                            cand.kv_dtype, shards=1)
+        t_ship = ship_bytes / hw.link_bw + hw.hop_s
+        # Prefill pool: P parallel workers (the multi-process form; the
+        # in-process pools serialise on the host, docs/serving.md), each
+        # an M/M/1 at rate lambda/P with service = one bucketed prefill.
+        rho = per_replica_rate * t_pre_dev / p_pool
+        if rho >= 1.0:
+            return _infeasible(
+                cand, f"prefill pool saturated (util {rho:.2f} at "
+                      f"{p_pool} prefill devices)")
+        ingest = per_replica_rate * (t_ship + hw.dispatch_s)
+        if ingest >= 1.0:
+            return _infeasible(
+                cand, "decode pool saturated by page ingest")
+        tok_s *= 1.0 - ingest     # decode time lost to ingest dispatches
+        ttft += t_ship + rho / (1.0 - rho) * t_pre_dev
+
     if cand.paged:
         # pool the engine would allocate: full residency for the lane
         # cap plus the trash page (engine default sizing), never more
@@ -464,13 +526,17 @@ def score_candidate(cfg, cand: Candidate, profile: TrafficProfile,
         pool_pages = 0
         kv_used = lanes_cap * lane_bytes
     hbm_used = weight_dev + kv_used
+    detail = {"weight_gb_dev": weight_dev / 1e9,
+              "lanes_cap": float(lanes_cap),
+              "tick_ms": tick_s(lanes) * 1e3}
+    if disagg:
+        detail.update(ship_bytes_adm=float(ship_bytes),
+                      t_ship_us=t_ship * 1e6, prefill_util=rho)
     return Score(
         cand=cand, feasible=True, tok_s=tok_s, ttft_ms=ttft * 1e3,
         step_ms=step * 1e3, hbm_frac=hbm_used / profile.hbm_bytes,
         lanes=lanes, replicas=replicas, kv_pages=pool_pages,
-        detail={"weight_gb_dev": weight_dev / 1e9,
-                "lanes_cap": float(lanes_cap),
-                "tick_ms": tick_s(lanes) * 1e3},
+        detail=detail,
     )
 
 
@@ -540,6 +606,11 @@ def realize(cfg, score: Score, mesh=None):
     from repro.core.cluster_builder import build_plan
     from repro.launch.mesh import make_abstract_mesh
     cand = score.cand
+    if cand.disagg_prefill:
+        raise PlanSearchError(
+            "disagg candidates own their device placement (no ClusterPlan "
+            "to realize); deploy with launch/serve.py --disagg "
+            f"{cand.disagg_prefill}:{cand.disagg_decode} --plan none")
     if mesh is None:
         if cand.mode == "serve":
             mesh = make_abstract_mesh(
@@ -555,6 +626,8 @@ def engine_kwargs(score: Score) -> Dict[str, Any]:
     kw: Dict[str, Any] = {"paged": cand.paged}
     if cand.paged:
         kw.update(page_size=cand.page_size, kv_dtype=cand.kv_dtype)
+    if cand.disagg_prefill:
+        kw["disagg"] = (cand.disagg_prefill, cand.disagg_decode)
     return kw
 
 

@@ -43,7 +43,8 @@ from repro.models.transformer import init_params, make_model
 from repro.runtime.stragglers import StragglerMonitor
 from repro.serving.engine import ContinuousBatchingEngine, WaveEngine
 from repro.serving.kv_manager import paged_eligible
-from repro.serving.stream import poisson_requests, shared_prefix_requests
+from repro.serving.stream import (bursty_requests, poisson_requests,
+                                  shared_prefix_requests)
 
 
 def _parse_mesh(spec: str, plan_mode: str):
@@ -224,10 +225,14 @@ def main(argv=None):
                          "exactness modes (params + serving cache) and exit")
     ap.add_argument("--no-plan", action="store_true",
                     help="deprecated alias for --plan none")
-    ap.add_argument("--stream", choices=["poisson", "shared-prefix"],
+    ap.add_argument("--stream",
+                    choices=["poisson", "shared-prefix", "bursty"],
                     default="poisson",
                     help="shared-prefix: one system prompt + unique tails "
-                         "(the radix prefix cache's target ingress)")
+                         "(the radix prefix cache's target ingress); "
+                         "bursty: steady short prompts with long-prompt "
+                         "bursts (the --disagg pools' target ingress, "
+                         "docs/perf.md §TTFT under burst)")
     ap.add_argument("--page-size", type=int, default=16,
                     help="paged-KV page length (rows); paged mode is "
                          "auto-enabled for all-attention models under no "
@@ -239,6 +244,15 @@ def main(argv=None):
                     help="paged KV-cache storage dtype; int8 stores "
                          "quantized pages (+ per-row scales) at ~half the "
                          "HBM per token (docs/serving.md §kv_dtype)")
+    ap.add_argument("--disagg", default="",
+                    help="disaggregated prefill/decode pools as P:D device "
+                         "counts, e.g. --disagg 4:4 — devices [0,P) run "
+                         "bucketed prefill and ship completed KV pages "
+                         "into the decode pool's arena; the radix tree "
+                         "spans both, so prefix hits admit decode-side "
+                         "with zero transfers.  Needs the paged cb engine "
+                         "under --plan none (docs/serving.md "
+                         "§disaggregated serving)")
     ap.add_argument("--draft-config", default="",
                     help="arch name for a speculative-decoding draft model "
                          "(randomly initialised; --reduced applies to it "
@@ -350,6 +364,27 @@ def main(argv=None):
             "serve: --kv-dtype int8 needs the paged pool (all-attention "
             "model under --plan none, serve, or a --no-exact "
             "serve_pipeline)")
+    disagg = None
+    if args.disagg:
+        try:
+            p_pool, d_pool = (int(x) for x in args.disagg.split(":"))
+        except ValueError:
+            raise SystemExit("serve: --disagg takes P:D device counts, "
+                             "e.g. --disagg 4:4")
+        if args.engine != "cb" or not paged:
+            raise SystemExit("serve: --disagg needs the paged cb engine "
+                             "(page shipping is the handoff mechanism)")
+        if args.plan != "none":
+            raise SystemExit("serve: --disagg owns device placement; "
+                             "combine it with --plan none")
+        if args.replicas > 1:
+            raise SystemExit("serve: --disagg does not compose with a "
+                             "--replicas fleet yet (cross-host shipping "
+                             "lands with the multi-process fleet)")
+        if args.draft_config:
+            raise SystemExit("serve: --disagg does not compose with "
+                             "--draft-config (no draft shipping path yet)")
+        disagg = (p_pool, d_pool)
     if args.dryrun:
         if plan is None:
             raise SystemExit("serve: --dryrun inspects a plan; pick "
@@ -366,6 +401,8 @@ def main(argv=None):
     if cls is ContinuousBatchingEngine:
         kw["page_size"] = args.page_size
         kw["kv_dtype"] = args.kv_dtype
+        if disagg is not None:
+            kw["disagg"] = disagg
         if args.num_pages:
             kw["num_pages"] = args.num_pages
         if args.draft_config:
@@ -420,6 +457,9 @@ def main(argv=None):
                                         prefix_len=48, suffix_range=(3, 9),
                                         budgets=args.max_new,
                                         rate=args.rate)
+    elif args.stream == "bursty":
+        stream = bursty_requests(rng, args.requests, cfg.vocab_size,
+                                 budgets=args.max_new, rate=args.rate)
     else:
         stream = poisson_requests(rng, args.requests, cfg.vocab_size,
                                   len_range=(4, 60), budgets=args.max_new,

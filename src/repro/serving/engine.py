@@ -12,7 +12,7 @@ module wires the three together behind the old monolith's public API
 from __future__ import annotations
 
 import time
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -103,8 +103,10 @@ class ContinuousBatchingEngine(EngineBase):
                  num_pages: Optional[int] = None,
                  max_hit_suffix: Optional[int] = None,
                  kv_dtype: str = "bf16",
-                 spec_config: Optional[dict] = None, **kw):
+                 spec_config: Optional[dict] = None,
+                 disagg: Optional[Tuple[int, int]] = None, **kw):
         super().__init__(*args, **kw)
+        self.disagg = tuple(disagg) if disagg is not None else None
         self.stats.update(admitted=0, completed=0, prefills=0,
                           active_lane_steps=0)
         self._slot_caches = None
@@ -190,6 +192,59 @@ class ContinuousBatchingEngine(EngineBase):
             self._ladder_warm = False
             self.stats.update(prefix_hits=0, prefix_hit_tokens=0,
                               preemptions=0, pages_in_use=0, pages_peak=0)
+        if self.disagg is not None:
+            self._init_disagg()
+
+    def _init_disagg(self) -> None:
+        """Disaggregated prefill/decode pools (`disagg=(P, D)`): devices
+        [0, P) become the prefill pool, [P, P+D) the decode pool.  The
+        prefill pool owns bucketed prefill + a transient staging arena;
+        completed pages ship into the decode arena (executor.ship_pages)
+        and ownership moves with them.  One radix tree — the decode
+        pool's — spans both: it indexes decode-arena pages only, so a
+        prefix hit admits without touching the prefill pool at all."""
+        import jax
+        p, d = self.disagg
+        if not self.paged:
+            raise ValueError(
+                "disagg needs the paged KV pool: page shipping is the "
+                "ownership-handoff mechanism (dense slot rows have no "
+                "transferable unit)")
+        if self.plan is not None:
+            raise ValueError(
+                "disagg does not compose with a ClusterPlan (the plan "
+                "already owns device placement); pick one")
+        if self.spec:
+            raise ValueError(
+                "disagg does not compose with spec_config (the draft "
+                "arena has no shipping path yet)")
+        devices = jax.devices()
+        if p < 1 or d < 1 or p + d > len(devices):
+            raise ValueError(
+                f"disagg={self.disagg}: needs prefill >= 1, decode >= 1, "
+                f"prefill+decode <= {len(devices)} host devices")
+        self.executor.set_disagg(devices[:p], devices[p:p + d])
+        # staging KV: one admission in flight, so max_pages + trash always
+        # covers the export; its ledgers see the same actual-freed
+        # accounting as the decode pool's
+        self.kv_prefill = KVManager(self.max_pages + 1, self.page_size, 1,
+                                    self.max_pages)
+        self._prefill_arena = None
+        self.stats.update(shipped_pages=0, shipped_bytes=0,
+                          ship_dispatches=0)
+        # queue split: the radix peek classifies pending requests into the
+        # decode-ingest queue (hit: admits decode-side, zero transfers)
+        # vs the prefill queue, and drives the pool-aware occupancy
+        # signals the fleet router reads (scheduler.set_disagg).
+        # prefill_chunk=max_batch keeps in-process admission
+        # work-conserving — the pools drain sequentially on this host, so
+        # throttling colds below free-slot capacity only delays them; the
+        # SJF ordering alone is what shields steady short traffic from a
+        # long-prompt burst.  A cross-host prefill pool with real
+        # per-cycle capacity would lower the chunk to its worker count.
+        self.sched.set_disagg(
+            lambda r: self.kv.peek_hit(np.asarray(r.effective_prompt())),
+            prefill_chunk=self.max_batch)
 
     pool = property(lambda self: self.kv.pool)
     prefix_cache = property(lambda self: self.kv.prefix_cache)
@@ -250,9 +305,12 @@ class ContinuousBatchingEngine(EngineBase):
             logits, small = self._prefill([prompt], 1, bucket_cache=True)
             bucket = bucket_len(len(prompt), self.buckets, lane=8)
             n_wp = min(self.kv.pages_for(bucket), len(grant.pages))
-            self.executor.admit_cold(
-                st, sl, small, grant.pt_row, len(prompt), grant.reset,
-                np.asarray(grant.pages[:n_wp], np.int32), bucket)
+            if self.disagg is not None:
+                self._ship_cold(st, sl, small, grant, prompt, bucket, n_wp)
+            else:
+                self.executor.admit_cold(
+                    st, sl, small, grant.pt_row, len(prompt), grant.reset,
+                    np.asarray(grant.pages[:n_wp], np.int32), bucket)
             self.stats["prefills"] += 1
             self.kv.register_prefix(prompt, grant.pages)
             self._first_token(r, int(self._greedy_next(logits)[0]))
@@ -268,6 +326,31 @@ class ContinuousBatchingEngine(EngineBase):
         self.stats["pages_peak"] = max(self.stats["pages_peak"],
                                        self.kv.pages_in_use)
         return True
+
+    def _ship_cold(self, st, sl: int, small, grant, prompt, bucket: int,
+                   n_wp: int) -> None:
+        """The disaggregated ownership handoff for one cold admission.
+
+        The request is *prefill-owned* while its bucket cache scatters
+        into staging pages on the prefill pool's arena, then
+        *decode-owned* once `ship_pages` lands those pages in the lane's
+        granted decode pages.  admit_hit first sentinels every granted
+        page and points the lane's table row at them, so the shipped page
+        contents (bitwise what admit_cold would have written, including
+        partial-page sentinel kpos and int8 scale planes) arrive into an
+        arena state identical to colocated serving's."""
+        src = self.kv_prefill.stage_export(n_wp)
+        self._prefill_arena = self.executor.prefill_admit(
+            self._prefill_arena, small, src.pt_row, len(prompt), src.reset,
+            np.asarray(src.pages, np.int32), bucket)
+        self.executor.admit_hit(st, sl, grant.pt_row, len(prompt),
+                                grant.reset)
+        self.executor.ship_pages(self._prefill_arena, st, src.pages,
+                                 grant.pages[:n_wp])
+        self.kv_prefill.finish_export(src.pages)
+        self.stats["ship_dispatches"] += 1
+        self.stats["shipped_pages"] += n_wp
+        self.stats["shipped_bytes"] += n_wp * self.kv_page_bytes()
 
     def _admit_draft(self, r: Request, sl: int, st, grant, prompt) -> None:
         """Bring the lane's draft cache to the target's position: a cold
@@ -401,6 +484,10 @@ class ContinuousBatchingEngine(EngineBase):
             self._draft_slot_caches = self.executor.init_draft_caches(
                 self.page_size, self.kv.draft_pool.num_pages,
                 self.max_pages, self.kv_dtype)
+        if self.disagg is not None and self._prefill_arena is None:
+            self._prefill_arena = self.executor.init_prefill_arena(
+                self.page_size, self.kv_prefill.num_pages, self.max_pages,
+                self.kv_dtype)
         st = self.executor.fresh_state(
             self._slot_caches, self.paged,
             draft_caches=self._draft_slot_caches if self.spec else None)
@@ -460,6 +547,10 @@ class ContinuousBatchingEngine(EngineBase):
 
         if self.paged:
             self.kv.assert_drained()
+            if self.disagg is not None:
+                # exports are transient: every staged page was returned by
+                # finish_export before its admission completed
+                self.kv_prefill.assert_drained()
         self._slot_caches = st["caches"]
         self._draft_slot_caches = st.get("draft_caches")
         return sorted(done, key=lambda r: r.rid)

@@ -104,6 +104,40 @@ class Executor:
         self._jit_draft_prefill: Dict = {}
         self._jit_admit_cold_draft: Dict = {}
         self._jit_catchup: Dict = {}
+        # disaggregated prefill/decode pools (set_disagg): a second param
+        # copy + mesh for the prefill pool, and the page-shipping programs
+        self.prefill_params = None
+        self.prefill_mesh = None
+        self.decode_mesh = None
+        self._prefill_sharding = None
+        self._decode_sharding = None
+        self._jit_prefill_admit: Dict = {}
+        self._jit_ship: Dict = {}
+
+    def set_disagg(self, prefill_devs, decode_devs) -> None:
+        """Split the executor across disjoint device pools: prefill
+        programs (and the staging arena they scatter into) live on
+        ``prefill_devs``, the decode arena / lane state / decode-side
+        admission programs on ``decode_devs``.  Params are committed to
+        both pools — prefill reads ``prefill_params``, everything else the
+        decode copy — so every program's placement follows its committed
+        operands and the only cross-pool traffic is `ship_pages`'
+        explicit block transfer.  Composes with plan=None engines only
+        (a ClusterPlan already owns placement)."""
+        assert self.plan is None, \
+            "disagg needs plan=None (a plan already owns placement)"
+        from jax.sharding import NamedSharding
+
+        from repro.serving.replica import make_group_mesh
+        self.prefill_mesh = make_group_mesh(
+            prefill_devs, (len(prefill_devs),), ("pool",))
+        self.decode_mesh = make_group_mesh(
+            decode_devs, (len(decode_devs),), ("pool",))
+        self._prefill_sharding = NamedSharding(self.prefill_mesh, P())
+        self._decode_sharding = NamedSharding(self.decode_mesh, P())
+        self.prefill_params = jax.device_put(self.params,
+                                             self._prefill_sharding)
+        self.params = jax.device_put(self.params, self._decode_sharding)
 
     def set_draft(self, draft_model: Model, draft_params) -> None:
         """Install the speculative-decoding draft model.  Draft weights
@@ -167,6 +201,8 @@ class Executor:
                 slot_table=True, paged=paged)
             self._cache_shardings = jax.tree.map(self.plan.sharding, specs)
             caches = jax.device_put(caches, self._cache_shardings)
+        elif self._decode_sharding is not None:
+            caches = jax.device_put(caches, self._decode_sharding)
         return caches
 
     def fresh_state(self, caches, paged: bool,
@@ -185,6 +221,8 @@ class Executor:
                       fptr=jnp.zeros((b,), jnp.int32))
         if draft_caches is not None:
             st["draft_caches"] = draft_caches
+        if self._decode_sharding is not None:
+            st = jax.device_put(st, self._decode_sharding)
         return st
 
     # -- prefill ---------------------------------------------------------------
@@ -229,8 +267,12 @@ class Executor:
             toks[i, :n] = p
             pos[i, :n] = np.arange(n)
             lengths[i] = n
+        # under disagg every prefill belongs to the prefill pool: the
+        # pool-committed param copy pins the dispatch there
+        params = (self.prefill_params if self.prefill_params is not None
+                  else self.params)
         return self._call(self._prefill_fn(bucket, batch, cache_slots),
-                          self.params, jnp.asarray(toks), jnp.asarray(pos),
+                          params, jnp.asarray(toks), jnp.asarray(pos),
                           jnp.asarray(lengths))
 
     @property
@@ -527,6 +569,79 @@ class Executor:
             self._jit_admit_cold[key], st["caches"], small, slot,
             jnp.asarray(pt_row), pos0, jnp.asarray(reset),
             jnp.asarray(write_pages))
+
+    # -- disaggregated page shipping (set_disagg) ------------------------------
+
+    def init_prefill_arena(self, page_size: int, num_pages: int,
+                           max_pages: int, kv_dtype: str = "bf16"):
+        """The prefill pool's staging arena: a batch-1 paged cache on the
+        prefill mesh.  One admission stages at a time (lane 0), so
+        ``num_pages = max_pages + 1`` (+ trash page) always covers it."""
+        arena = self.model.init_paged_cache(
+            1, num_pages, page_size, max_pages, kv_dtype=kv_dtype)
+        return jax.device_put(arena, self._prefill_sharding)
+
+    def prefill_admit(self, arena, small, pt_row, pos0: int, reset,
+                      write_pages: np.ndarray, bucket: int):
+        """Scatter a bucket prefill cache into the staging arena's pages
+        (admit_cold's scatter, aimed at the prefill pool's arena at lane
+        0).  The page *contents* this writes are exactly what admit_cold
+        would have written into the decode arena — int8 arenas quantize on
+        the way in here, before shipping — which is what makes disagg
+        streams bit-identical to colocated serving."""
+        key = (bucket, len(write_pages))
+        if key not in self._jit_prefill_admit:
+            model = self.model
+
+            def fn(big, small, pt_row, pos0, reset, wp):
+                return model.admit_lane_cache(big, 0, pt_row, pos0, reset,
+                                              small=small, write_pages=wp)
+
+            self._jit_prefill_admit[key] = jax.jit(fn, donate_argnums=(0,))
+        return self._call(self._jit_prefill_admit[key], arena, small,
+                          jnp.asarray(pt_row), pos0, jnp.asarray(reset),
+                          jnp.asarray(write_pages))
+
+    def ship_pages(self, arena, st, src_pages, dst_pages) -> None:
+        """Ship completed KV pages from the prefill arena into the decode
+        arena: ONE batched gather on the prefill mesh, one cross-pool
+        block transfer, one batched scatter (donated) into the decode
+        caches.  Every arena leaf rides the same tree map, so an int8
+        arena's `k_scale`/`v_scale` planes travel with their pages.
+
+        Programs are keyed per power-of-two page count; both index
+        vectors pad with the trash page 0, which is safe on each side —
+        trash-page kpos is sentinel by construction (inactive-lane writes
+        are sentinel-stamped, attention.py), so a trash→trash copy cannot
+        make stale keys reachable."""
+        n = len(src_pages)
+        assert n == len(dst_pages) and n > 0
+        n_pad = 1 << (n - 1).bit_length()
+        src = np.zeros((n_pad,), np.int32)
+        src[:n] = src_pages
+        dst = np.zeros((n_pad,), np.int32)
+        dst[:n] = dst_pages
+        if n_pad not in self._jit_ship:
+            from repro.models.transformer import paged_cache_map
+
+            def gfn(scan, tail, idx):
+                return paged_cache_map(
+                    lambda ax, name, b: jnp.take(b, idx, axis=ax),
+                    {"scan": scan, "tail": tail})
+
+            def sfn(caches, blk, idx):
+                sub = paged_cache_map(
+                    lambda ax, name, b, s: (b.at[idx].set(s) if ax == 0
+                                            else b.at[:, idx].set(s)),
+                    {"scan": caches["scan"], "tail": caches["tail"]}, blk)
+                return dict(caches, scan=sub["scan"], tail=sub["tail"])
+
+            self._jit_ship[n_pad] = (jax.jit(gfn),
+                                     jax.jit(sfn, donate_argnums=(0,)))
+        gather, scatter = self._jit_ship[n_pad]
+        blk = gather(arena["scan"], arena["tail"], jnp.asarray(src))
+        blk = jax.device_put(blk, self._decode_sharding)  # the pool hop
+        st["caches"] = scatter(st["caches"], blk, jnp.asarray(dst))
 
     def admit_lane(self, st, sl: int, tok: int, eos_id: int,
                    bud: int) -> None:

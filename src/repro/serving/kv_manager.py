@@ -261,6 +261,43 @@ class KVManager:
                               draft_pages=draft_pages, draft_pt_row=draft_pt,
                               draft_reset=draft_reset)
 
+    def peek_hit(self, prompt: np.ndarray) -> int:
+        """Advisory prefix-hit length (positions) for `prompt` — no
+        references taken, no LRU/stat mutation.  The disaggregated
+        scheduler classifies queued requests with this (hit => the
+        decode-ingest queue, no prefill-pool work); `admit` re-checks at
+        admission time, so a stale answer only mis-sorts the queue."""
+        return self.prefix_cache.peek(prompt)
+
+    # -- page shipping (disaggregated prefill pool side) ----------------------
+
+    def stage_export(self, n_pages: int) -> AdmissionGrant:
+        """Reserve `n_pages` staging pages in THIS manager's arena (the
+        prefill pool's) for one admission's prefill KV, to be shipped to
+        a decode-pool arena and then released via `finish_export`.
+
+        Returns an AdmissionGrant whose pt_row/reset rows drive the
+        executor's `prefill_admit` scatter at staging slot 0 — the exact
+        rows a colocated cold admission would build, so the staged page
+        contents are bitwise what `admit_cold` writes.  Exports are
+        transient (one in flight per admission), so a pool sized
+        `max_pages + 1` can never decline."""
+        own = self.pool.alloc(n_pages)
+        self._resident(len(own))
+        pt_row = np.zeros((self.max_pages,), np.int32)
+        pt_row[:len(own)] = own
+        reset = np.zeros((self.max_pages,), np.int32)
+        reset[:len(own)] = own
+        return AdmissionGrant(pages=own, hit_pages=[], hit_len=0,
+                              pt_row=pt_row, reset=reset)
+
+    def finish_export(self, pages: List[int]) -> None:
+        """Release a `stage_export` reservation after its pages were
+        shipped.  Ledger moves by the pages ACTUALLY freed (the same
+        discipline as `release`), so a future prefill-side prefix cache
+        sharing staged pages stays correctly accounted."""
+        self._freed(len(self.pool.decref(pages)))
+
     def commit(self, slot: int, grant: AdmissionGrant) -> None:
         self._lane_pages[slot] = grant.pages
         if grant.draft_pages is not None:

@@ -96,6 +96,28 @@ class Scheduler:
         # partition into contiguous groups, one per pipeline stage offset
         self.max_batch = max_batch
         self.n_lane_groups = 1
+        # disaggregated prefill/decode (set_disagg): a classifier splits
+        # the waiting queue into a prefill queue (cold prompts — they owe
+        # the prefill pool a bucketed dispatch) and a decode-ingest queue
+        # (radix prefix hits — they skip prefill AND the page transfer),
+        # each with its own occupancy signal for the fleet router
+        self._hit_len = None  # classify(req) -> cached-prefix positions
+        self.prefill_chunk = 1
+
+    # -- disaggregated queues (prefill pool vs decode ingest) ----------------
+
+    def set_disagg(self, hit_len, prefill_chunk: int = 1) -> None:
+        """Enable the split admission queues.  `hit_len(req)` returns the
+        request's advisory cached-prefix length in positions (0 = cold —
+        the request owes the prefill pool a bucketed dispatch; > 0 = the
+        decode pool can ingest it directly).  `prefill_chunk` caps
+        non-overdue cold admissions per cycle so a long-prompt burst
+        cannot monopolize consecutive admission windows — the TTFT knob
+        the disaggregation buys (docs/serving.md §disaggregated
+        serving)."""
+        assert prefill_chunk >= 1
+        self._hit_len = hit_len
+        self.prefill_chunk = prefill_chunk
 
     # -- lane groups (request-skewed serve_pipeline) -------------------------
 
@@ -144,20 +166,50 @@ class Scheduler:
         req.t_enqueue = time.perf_counter()
         self.queue.append(req)
 
-    def queue_depth(self) -> int:
+    def queue_depth(self, pool: Optional[str] = None) -> int:
         """Requests waiting for admission (the fleet router's shedding
         signal: serving/router.py sheds when every replica's depth
-        exceeds its configured budget)."""
-        return len(self.queue)
+        exceeds its configured budget).
 
-    def projected_occupancy(self) -> int:
+        pool=None counts the whole queue (the router's historical
+        signal); pool="prefill" counts requests owing a prefill-pool
+        dispatch, pool="decode" the decode-ingest (prefix-hit) queue —
+        with no classifier set, every admission pays prefill, so
+        "prefill" is the whole queue and "decode" empty."""
+        if pool is None:
+            return len(self.queue)
+        assert pool in ("prefill", "decode"), pool
+        if self._hit_len is None:
+            return len(self.queue) if pool == "prefill" else 0
+        hits = sum(self._hit_len(r) > 0 for r in self.queue)
+        return hits if pool == "decode" else len(self.queue) - hits
+
+    def projected_occupancy(self, pool: Optional[str] = None) -> int:
         """Projected queued work in token-steps: per waiting request, the
         bucketed prompt cost (prefill rides a bucket-padded dispatch) plus
         the decode budget still owed.  The fleet router's least-loaded
         placement ranks replicas by this figure — it is the queue-side
         analogue of `order_free`'s per-group occupancy ranking, exported
-        because between `run()` drains the queue is the whole backlog."""
-        return sum(self.policy.bucket_of(len(r.prompt)) + r.remaining()
+        because between `run()` drains the queue is the whole backlog.
+
+        pool=None is the combined figure (back-compatible).  Under
+        disaggregation the two pools carry different work for the same
+        request: pool="prefill" sums the bucketed prompt cost of COLD
+        queued requests only (what the prefill pool owes — the signal a
+        router uses to route around a saturated prefill pool);
+        pool="decode" sums every request's decode budget plus, for
+        prefix hits, the un-hit suffix it re-ingests through the forced
+        queue (hits never touch the prefill pool)."""
+        if pool is None:
+            return sum(self.policy.bucket_of(len(r.prompt)) + r.remaining()
+                       for r in self.queue)
+        assert pool in ("prefill", "decode"), pool
+        hit = self._hit_len if self._hit_len is not None else (lambda r: 0)
+        if pool == "prefill":
+            return sum(self.policy.bucket_of(len(r.prompt))
+                       for r in self.queue if hit(r) <= 0)
+        return sum(r.remaining()
+                   + (max(0, len(r.prompt) - h) if (h := hit(r)) > 0 else 0)
                    for r in self.queue)
 
     def take_queue(self) -> List[Request]:
@@ -187,8 +239,12 @@ class Scheduler:
             # pages enough times
             hot = [r for r in arrived if r.n_preempts >= self.preempt_budget]
             rest = [r for r in arrived if r.n_preempts < self.preempt_budget]
-            order = hot + (self.select(rest, len(free) - len(hot), warm, now)
-                           if rest and len(free) > len(hot) else [])
+            if self._hit_len is not None:
+                order = hot + self._disagg_order(rest, now)
+            else:
+                order = hot + (self.select(rest, len(free) - len(hot),
+                                           warm, now)
+                               if rest and len(free) > len(hot) else [])
             for r in order:
                 if not free:
                     break
@@ -197,6 +253,28 @@ class Scheduler:
                     break
                 admitted.append((r, free.pop(0)))
         return admitted, starved
+
+    def _disagg_order(self, rest, now: float):
+        """Admission order under split queues.  Decode-ingest requests
+        (advisory prefix hits) admit first, FIFO, without limit — they
+        cost the decode pool a pt/reset update and zero prefill-pool or
+        transfer work.  Cold requests go through the prefill pool:
+        deadline-overdue ones keep their FIFO guarantee, then at most
+        `prefill_chunk` more per cycle ordered shortest-bucket-first —
+        SJF bounds how long a long-prompt burst can stall the short
+        steady traffic queued behind it, and because admission order
+        changes only WHEN a request runs (greedy lanes decode
+        independently), the streams stay bit-identical to colocated
+        FIFO serving."""
+        ingest = [r for r in rest if self._hit_len(r) > 0]
+        cold = [r for r in rest if self._hit_len(r) <= 0]
+        dl = self.policy.deadline
+        overdue = [r for r in cold
+                   if dl is not None and dl.overdue(now - r.t_arrival)]
+        fresh = sorted((r for r in cold if r not in overdue),
+                       key=lambda r: (self.policy.bucket_of(len(r.prompt)),
+                                      r.t_enqueue))
+        return ingest + overdue + fresh[:self.prefill_chunk]
 
     @staticmethod
     def idle_wait(pending, starved, now: float) -> None:

@@ -94,6 +94,56 @@ def multi_prefix_requests(rng: np.random.Generator, n: int, vocab_size: int,
             for i in range(n)]
 
 
+def bursty_requests(rng: np.random.Generator, n: int, vocab_size: int,
+                    short_range: Tuple[int, int] = (8, 16),
+                    long_range: Tuple[int, int] = (180, 240),
+                    burst_every: int = 8, burst_size: int = 4,
+                    budgets: Union[int, Tuple[int, int]] = (6, 12),
+                    rate: float = 0.0) -> List[Request]:
+    """Phase-skewed arrivals: steady short-prompt decode traffic with
+    long-prompt *bursts* injected every ``burst_every`` steady arrivals
+    (``burst_size`` long prompts land at the same instant).  This is the
+    ingress shape that exposes the colocated prefill-stall pathology —
+    each burst member costs a large-bucket prefill dispatch, and every
+    short request queued behind the burst pays that bill in TTFT — and
+    the one the disaggregated prefill/decode pools are measured on
+    (benchmarks/run.py serve_disagg, docs/perf.md §TTFT under burst).
+
+    Short vs long is classifiable from ``len(prompt)`` alone (the ranges
+    must not overlap); total request count is exactly ``n``.  Purely
+    rng-driven, so a stream is deterministic under `clone_requests`."""
+    if short_range[1] > long_range[0]:
+        raise ValueError("bursty_requests: short_range and long_range "
+                         "overlap — burst membership must be classifiable "
+                         "from prompt length")
+    reqs: List[Request] = []
+    t = 0.0
+    steady = 0
+    while len(reqs) < n:
+        if steady and steady % burst_every == 0:
+            # a burst: `burst_size` long prompts at this instant
+            for _ in range(min(burst_size, n - len(reqs))):
+                ln = int(rng.integers(long_range[0], long_range[1]))
+                bud = (int(rng.integers(budgets[0], budgets[1]))
+                       if isinstance(budgets, tuple) else int(budgets))
+                reqs.append(Request(
+                    rid=len(reqs),
+                    prompt=rng.integers(0, vocab_size, ln).astype(np.int32),
+                    max_new_tokens=bud, t_arrival=t))
+            steady += 1  # one burst per boundary, then steady resumes
+            continue
+        t += float(rng.exponential(1.0 / rate)) if rate > 0 else 0.0
+        ln = int(rng.integers(short_range[0], short_range[1]))
+        bud = (int(rng.integers(budgets[0], budgets[1]))
+               if isinstance(budgets, tuple) else int(budgets))
+        reqs.append(Request(
+            rid=len(reqs),
+            prompt=rng.integers(0, vocab_size, ln).astype(np.int32),
+            max_new_tokens=bud, t_arrival=t))
+        steady += 1
+    return reqs
+
+
 def clone_requests(reqs: List[Request]) -> List[Request]:
     """Fresh Request objects over the same prompts/budgets/arrivals (for
     replaying one stream through several engines)."""

@@ -205,6 +205,55 @@ def test_kv_manager_per_shard_ledger_tracks_actual_frees():
         kv.assert_drained()
 
 
+def test_evict_cached_moves_every_shard_ledger_by_actual_frees():
+    """`evict_cached` is the only correct external eviction path: it
+    routes the pages the tree ACTUALLY freed through the per-shard
+    residency ledger.  Lane-held prefix pages are not evictable (the
+    tree's LRU only frees tree-only leaves), so the returned count can
+    undershoot the request — and the ledger must move by that count on
+    every shard, never by the requested figure."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.serving.kv_manager import KVManager, kv_page_bytes
+
+    kv = KVManager(num_pages=9, page_size=4, max_batch=4, max_pages=8,
+                   shards=4)
+    held = np.arange(8, dtype=np.int32)        # 2 full pages, stays laned
+    g1 = kv.admit(held, rem_budget=0, max_hit_suffix=16)
+    kv.commit(0, g1)
+    kv.register_prefix(held, g1.pages)
+    idle = np.arange(100, 108, dtype=np.int32)  # 2 full pages, tree-only
+    g2 = kv.admit(idle, rem_budget=0, max_hit_suffix=16)
+    kv.commit(1, g2)
+    kv.register_prefix(idle, g2.pages)
+    kv.release(1)
+    before = kv.shard_pages_in_use(0)
+    # ask for 4: only `idle`'s 2 pages are evictable (lane 0 still holds
+    # `held`'s, so the tree drops at most its own leaf refs there)
+    freed = kv.evict_cached(4)
+    assert freed == len(g2.pages) == 2
+    for shard in range(kv.shards):
+        assert before - kv.shard_pages_in_use(shard) == freed
+    assert (kv._shard_pages == kv.pool.pages_in_use).all()
+    # stage views observe the eviction in stage-local bytes
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              n_layers=8)
+    v = kv.stage_view(3)
+    assert v.pages_in_use == kv.pool.pages_in_use
+    assert v.resident_bytes(cfg) == v.pages_in_use * kv_page_bytes(
+        cfg, 4, "bf16", shards=4)
+    # the evicted prefix is really gone (cold again), the held one hits
+    assert kv.peek_hit(np.arange(100, 109, dtype=np.int32)) == 0
+    assert kv.peek_hit(np.arange(9, dtype=np.int32)) == 8
+    # drain: release the held lane, evict the remainder, ledgers at zero
+    kv.release(0)
+    assert kv.evict_cached(kv.pool.num_pages) == len(g1.pages)
+    assert kv.pool.pages_in_use == 0
+    assert (kv._shard_pages == 0).all()
+    kv.assert_drained()
+
+
 # -- cluster-builder: the exact flag ---------------------------------------
 
 

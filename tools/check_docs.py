@@ -1,7 +1,8 @@
 #!/usr/bin/env python
-"""Docs gate: intra-repo links and CLI snippets must match the tree.
+"""Docs gate: intra-repo links, CLI snippets and named gate keys must
+match the tree.
 
-Two checks over README.md, ROADMAP.md and docs/*.md (the curated docs —
+Three checks over README.md, ROADMAP.md and docs/*.md (the curated docs —
 not the paper/issue scratch files):
 
 1. **Links** — every relative markdown link `[text](path)` must resolve
@@ -16,6 +17,15 @@ not the paper/issue scratch files):
    tracks argparse, not a hand-kept list), run.py flags from its source
    literals (it parses argv by hand).  A renamed flag breaks the doc's
    copy-paste path; this catches it at PR time.
+
+3. **Gate keys** — every backticked identifier shaped like a perf-gate
+   metric (contains ``_vs_``, ends in ``_improvement``, or is one of the
+   gate-owned leaves ``tok_s`` / ``dispatches_per_token`` /
+   ``token_match_rate``) must exist as a leaf in
+   benchmarks/baseline.json.  docs/perf.md documents the gates by key
+   name; a key renamed in the bench but not the docs (or documented
+   before its baseline section landed) would otherwise point readers at
+   a metric the gate no longer owns.
 
 Exit 0 clean, 1 with one line per problem.  Run from anywhere:
     PYTHONPATH=src python tools/check_docs.py
@@ -36,6 +46,14 @@ FLAG_RE = re.compile(r"(?<![\w-])--[a-zA-Z][\w-]*")
 # a command line "uses" a tool when it names its module or script path
 SERVE_RE = re.compile(r"(repro\.launch\.serve|launch/serve\.py)")
 RUNPY_RE = re.compile(r"benchmarks/run\.py")
+# backticked identifiers that look like perf-gate metric names
+TICKED_RE = re.compile(r"`([a-z][a-z0-9_]*)`")
+_GATE_LEAVES = ("tok_s", "dispatches_per_token", "token_match_rate")
+
+
+def _gate_key_shaped(name: str) -> bool:
+    return ("_vs_" in name or name.endswith("_improvement")
+            or name in _GATE_LEAVES)
 
 
 def doc_files() -> List[str]:
@@ -79,11 +97,50 @@ def serve_flags() -> Set[str]:
 
 def runpy_flags() -> Set[str]:
     """benchmarks/run.py parses argv by hand — its accepted flags are the
-    `--...` string literals in the source."""
+    `--...` string literals in the source (collected from the AST, so an
+    apostrophe inside some unrelated string can't desync the scan the way
+    a quote-pairing regex would)."""
+    import ast
     with open(os.path.join(ROOT, "benchmarks", "run.py")) as f:
-        src = f.read()
-    return set(FLAG_RE.findall(" ".join(re.findall(r"[\"']([^\"']*)[\"']",
-                                                   src))))
+        tree = ast.parse(f.read())
+    flags: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            flags |= set(FLAG_RE.findall(node.value))
+    return flags
+
+
+def baseline_gate_keys() -> Set[str]:
+    """Leaf key names of the committed perf baseline (the names
+    benchmarks/run.py's gate walks), minus provenance stamps."""
+    import json
+    with open(os.path.join(ROOT, "benchmarks", "baseline.json")) as f:
+        base = json.load(f)
+    for k in ("_meta", "_run_meta", "rows"):
+        base.pop(k, None)
+    keys: Set[str] = set()
+
+    def walk(tree) -> None:
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                if isinstance(v, dict):
+                    walk(v)
+                else:
+                    keys.add(k)
+
+    walk(base)
+    return keys
+
+
+def check_gate_keys(path: str, text: str, known: Set[str],
+                    errors: List[str]) -> None:
+    rel = os.path.relpath(path, ROOT)
+    for name in sorted({m.group(1) for m in TICKED_RE.finditer(text)}):
+        if _gate_key_shaped(name) and name not in known:
+            errors.append(
+                f"{rel}: gate key `{name}` has no leaf in "
+                f"benchmarks/baseline.json — renamed in the bench, or "
+                f"documented before its baseline section was committed")
 
 
 def check_cli_snippets(path: str, text: str, serve: Set[str],
@@ -107,19 +164,22 @@ def check_cli_snippets(path: str, text: str, serve: Set[str],
 def main() -> int:
     errors: List[str] = []
     serve, runpy = serve_flags(), runpy_flags()
+    gate_keys = baseline_gate_keys()
     files = doc_files()
     for path in files:
         with open(path) as f:
             text = f.read()
         check_links(path, text, errors)
         check_cli_snippets(path, text, serve, runpy, errors)
+        check_gate_keys(path, text, gate_keys, errors)
     if errors:
         print(f"check_docs: {len(errors)} problem(s) in {len(files)} files")
         for e in errors:
             print("  " + e)
         return 1
     print(f"check_docs: OK ({len(files)} files, "
-          f"{len(serve)} serve flags, {len(runpy)} run.py flags)")
+          f"{len(serve)} serve flags, {len(runpy)} run.py flags, "
+          f"{len(gate_keys)} baseline gate keys)")
     return 0
 
 
